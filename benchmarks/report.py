@@ -1,0 +1,92 @@
+"""Assemble EXPERIMENTS.md sections (Dry-run, Roofline tables) from the
+results JSONs.  Run after dryrun.py + roofline.py:
+
+    PYTHONPATH=src python -m benchmarks.report > results/report.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 2**30:
+        return f"{b/2**30:.2f} GiB"
+    if b >= 2**20:
+        return f"{b/2**20:.1f} MiB"
+    return f"{b/2**10:.0f} KiB"
+
+
+def dryrun_table(path: str, mesh_name: str) -> str:
+    rows = json.load(open(path))
+    out = [f"\n### Mesh {mesh_name}\n",
+           "| arch | shape | compile (s) | peak HBM/dev | HLO flops/dev "
+           "(loop-body) | collectives/dev (per layer-loop body) |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP: {r['skipped'][:60]}… |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | — | — | "
+                       f"{r['error'][:60]} |")
+            continue
+        coll = ", ".join(f"{k.split('-')[-1]}={fmt_bytes(v)}"
+                         for k, v in sorted(r["collective_bytes"].items())
+                         if v > 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+            f"{fmt_bytes(r['memory']['bytes_per_device_peak'])} | "
+            f"{r['flops']:.2e} | {coll} |")
+    return "\n".join(out)
+
+
+def roofline_table(path: str) -> str:
+    rows = json.load(open(path))
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | MODEL_FLOPS | MODEL/executed | roofline frac | "
+           "peak GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio_model_over_executed']:.2f} | "
+            f"{r['roofline_fraction']*100:.1f}% | {r['peak_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def bottleneck_notes(path: str) -> str:
+    rows = json.load(open(path))
+    out = []
+    for r in rows:
+        out.append(f"- **{r['arch']} × {r['shape']}** ({r['dominant']}-bound):"
+                   f" {r['note']}.")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-single", default="results/dryrun_singlepod.json")
+    ap.add_argument("--dryrun-multi", default="results/dryrun_multipod.json")
+    ap.add_argument("--roofline", default="results/roofline.json")
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+
+    if args.section in ("all", "dryrun"):
+        print("## §Dry-run\n")
+        print(dryrun_table(args.dryrun_single, "16×16 (single pod)"))
+        print(dryrun_table(args.dryrun_multi, "2×16×16 (multi-pod)"))
+    if args.section in ("all", "roofline"):
+        print("\n## §Roofline (single-pod, 256 chips)\n")
+        print(roofline_table(args.roofline))
+        print("\n### Per-cell bottleneck notes\n")
+        print(bottleneck_notes(args.roofline))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Benchmark harness: one function per paper table/figure + kernel micros.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract, plus
+human-readable tables.  Roofline numbers live in launch/roofline.py (they
+need the 512-device dry-run) -- see EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _bench_callable(fn, *args, iters=3, warmup=1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6
+
+
+def bench_tables(fast: bool) -> None:
+    from benchmarks import tables
+
+    t2 = tables.table2()
+    print("\n=== Table 2 (Virtex-7 proxy): app x system ===")
+    print(f"{'app':12s} {'system':9s} {'LUT':>8s} {'FF':>8s} {'BRAM':>5s} {'DSP':>4s} {'t(s)':>6s}")
+    for app, rows in t2.items():
+        for sysname, r in rows.items():
+            print(f"{app:12s} {sysname:9s} {r['lut']:8.0f} {r['ff']:8.0f} "
+                  f"{r['bram']:5d} {r['dsp']:4d} {r['seconds']:6.2f} "
+                  f"{r['scheme'] if r['banks'] == 0 else ''}")
+    ch2 = tables.avg_change(t2)
+    for sysname, d in ch2.items():
+        print(f"Avg change vs {sysname}: "
+              + " ".join(f"{k}={v:+.1f}%" for k, v in d.items()))
+        print(f"table2_vs_{sysname},0,"
+              + ";".join(f"{k}{v:+.1f}%" for k, v in d.items()))
+
+    t3 = tables.table3()
+    print("\n=== Table 3 (AWS F1 proxy): app x system ===")
+    for app, rows in t3.items():
+        for sysname, r in rows.items():
+            print(f"{app:12s} {sysname:9s} {r['lut']:8.0f} {r['ff']:8.0f} "
+                  f"{r['bram']:5d} {r['dsp']:4d} {r['seconds']:6.2f} "
+                  f"{r['scheme'] if r['banks'] == 0 else ''}")
+    ch3 = tables.avg_change(t3)
+    for sysname, d in ch3.items():
+        print(f"Avg change vs {sysname}: "
+              + " ".join(f"{k}={v:+.1f}%" for k, v in d.items()))
+        print(f"table3_vs_{sysname},0,"
+              + ";".join(f"{k}{v:+.1f}%" for k, v in d.items()))
+
+    st = tables.search_time()
+    print("\n=== Search-time (Sec 6 claim) ===")
+    for app, r in st.items():
+        print(f"{app:8s} multidim={r['with_multidim_s']:.2f}s "
+              f"flat-only={r['flat_only_s']:.2f}s speedup={r['speedup']:.2f}x")
+        print(f"search_time_{app},{r['with_multidim_s']*1e6:.0f},"
+              f"speedup={r['speedup']:.2f}x")
+
+    import os
+    cached = "results/fig11.json"
+    if fast and os.path.exists(cached):
+        f11 = json.load(open(cached))
+        tag = " (cached: estimator CV is independent of ranking weights)"
+    elif not fast:
+        f11 = tables.fig11(n_splits=3)
+        with open(cached, "w") as f:
+            json.dump(f11, f, indent=1)
+        tag = ""
+    else:
+        return
+    print(f"\n=== Fig 11 (cost-model CV, 3 splits){tag} ===")
+    for m in ("gbt", "mlp"):
+        for tgt, s in f11[m].items():
+            print(f"{m:4s} {tgt:5s} R2 = {s['mean']:.3f} +- {s['std']:.3f}")
+            print(f"fig11_{m}_{tgt},0,R2={s['mean']:.3f}")
+
+
+def bench_kernels() -> None:
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    print("\n=== Kernel micro-benches (interpret on CPU; structural) ===")
+    B, S, H, Hkv, Dh = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+    _, us = _bench_callable(
+        lambda: ops.mha(q, k, v).block_until_ready(), iters=2)
+    print(f"flash_attention_{S},{us:.0f},interpret")
+
+    Bs, Hs, Q, P, N = 1, 4, 64, 32, 16
+    x = jnp.asarray(rng.normal(size=(Bs, Hs, Q, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.2, (Bs, Hs, Q)), jnp.float32)
+    cum = jnp.cumsum(-dt, -1)
+    bm = jnp.asarray(rng.normal(size=(Bs, Q, N)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(Bs, Q, N)), jnp.float32)
+    s0 = jnp.zeros((Bs, Hs, P, N), jnp.float32)
+    _, us = _bench_callable(
+        lambda: ops.ssd(x, dt, bm, cm, cum, s0)[0].block_until_ready(),
+        iters=2)
+    print(f"ssd_chunk_{Q},{us:.0f},interpret")
+
+
+def bench_solver() -> None:
+    from repro.core import problems
+    from repro.core.api import partition_memory
+
+    print("\n=== Solver latency per benchmark problem ===")
+    for app in list(problems.STENCILS) + ["sw", "spmv", "sgd", "md_grid"]:
+        prog = problems.build(app)
+        memname = list(prog.memories)[0]
+        t0 = time.perf_counter()
+        rep = partition_memory(prog, memname)
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"solver_{app},{us:.0f},candidates={rep.num_candidates}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the cost-model CV (slowest part)")
+    args = ap.parse_args()
+    import os
+    os.makedirs("results", exist_ok=True)
+    print("name,us_per_call,derived")
+    bench_solver()
+    bench_kernels()
+    bench_tables(args.fast)
+
+
+if __name__ == "__main__":
+    main()

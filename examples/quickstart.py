@@ -1,0 +1,55 @@
+"""Quickstart: partition a memory with the banking system, inspect the
+chosen scheme, and run the banked-gather Pallas kernel against it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AccessDecl, Counter, Ctrl, MemorySpec, Program,
+                        Sched, partition_memory)
+from repro.core.polytope import Affine
+from repro.kernels import ops, ref
+
+
+def main():
+    # A 1-D table read by 8 vectorized lanes each cycle (Fig. 1 flow).
+    mem = MemorySpec("table", dims=(256,), word_bits=32, ports=1)
+    program = Program(
+        root=Ctrl(
+            "reader", Sched.INNER,
+            counters=[Counter("i", start=0, step=1, count=32, par=8)],
+            accesses=[AccessDecl("table", (Affine.of(i=1),), label="rd")],
+        ),
+        memories={"table": mem},
+    )
+
+    report = partition_memory(program, "table")
+    print(f"groups: {[len(g) for g in report.groups]}")
+    print(f"candidates examined: {report.num_candidates} "
+          f"in {report.solve_seconds*1e3:.1f} ms")
+    print("top 3 schemes:")
+    for s in report.solutions[:3]:
+        print("  ", s.describe())
+    best = report.best
+
+    # Pack data bank-major per the scheme and gather through the kernel --
+    # the bank-resolution arithmetic (Eq. 1-2 + Sec 3.4 rewrites) runs in
+    # the BlockSpec index_map.
+    D = 16
+    flat = jnp.asarray(np.random.default_rng(0).normal(size=(256, D)),
+                       jnp.float32)
+    table = ops.pack_banked(flat, best)
+    idx = jnp.asarray([0, 7, 63, 101, 255, 128, 33, 200], jnp.int32)
+    got = ops.gather_banked(table, idx, best)
+    want = ref.banked_gather_reference(flat, idx)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    print(f"banked_gather over {best.num_banks} banks: exact ✓")
+    raw = best.raw_ops
+    print(f"raw mul/div/mod left in resolution arithmetic: {raw} "
+          f"(DSP-free: {best.dsp_free})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-param dense LM with the full stack --
+banking-driven sharding, fault-tolerant trainer, checkpoints, data pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300        # ~100M
+    PYTHONPATH=src python examples/train_lm.py --quick            # tiny/CI
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig
+from repro.models import get_model
+from repro.optim import adamw
+from repro.runtime.trainer import TrainConfig, train
+
+
+def lm_100m() -> ArchConfig:
+    """~100M params: 12L, d=768, 12H, ff=3072, vocab 32k (GPT-2-small-ish)."""
+    return ArchConfig(
+        name="lm-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, d_ff=3072, vocab=32_000, head_dim=64,
+    )
+
+
+def lm_quick() -> ArchConfig:
+    return ArchConfig(
+        name="lm-quick", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=4, d_ff=256, vocab=512, head_dim=32,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = lm_quick() if args.quick else lm_100m()
+    if args.quick:
+        args.steps = min(args.steps, 30)
+    model = get_model(cfg)
+    import jax
+    n_params = sum(
+        int(x.size) if hasattr(x, "size") else 0
+        for x in jax.tree.leaves(
+            jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))))
+    print(f"arch {cfg.name}: {n_params/1e6:.1f}M params")
+
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch, seed=0)
+    train_cfg = TrainConfig(total_steps=args.steps,
+                            ckpt_every=max(args.steps // 5, 10),
+                            log_every=10, ckpt_dir=args.ckpt_dir)
+    opt_cfg = adamw.AdamWConfig(lr_peak=6e-4, warmup_steps=args.steps // 10,
+                                total_steps=args.steps)
+    out = train(model, data_cfg, train_cfg, opt_cfg)
+    losses = out["losses"]
+    k = max(len(losses) // 10, 1)
+    print(f"loss: first-{k} avg {sum(losses[:k])/k:.4f} -> "
+          f"last-{k} avg {sum(losses[-k:])/k:.4f}")
+    assert sum(losses[-k:]) < sum(losses[:k]), "loss did not decrease!"
+    print("training loss decreased ✓ (resume-safe checkpoints in",
+          train_cfg.ckpt_dir + ")")
+
+
+if __name__ == "__main__":
+    main()

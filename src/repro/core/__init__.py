@@ -1,0 +1,16 @@
+"""Core banking system: the paper's contribution as a composable library."""
+
+from .api import BankingReport, partition_all, partition_memory, rank_solutions
+from .controller import AccessDecl, Counter, Ctrl, Program, Sched, Unroll, unroll
+from .geometry import FlatGeometry, MultiDimGeometry
+from .grouping import build_groups
+from .polytope import Access, AccessGroup, Affine, Iterator, MemorySpec
+from .solver import BankingSolution, SolverOptions, solve
+
+__all__ = [
+    "Access", "AccessDecl", "AccessGroup", "Affine", "BankingReport",
+    "BankingSolution", "Counter", "Ctrl", "FlatGeometry", "Iterator",
+    "MemorySpec", "MultiDimGeometry", "Program", "Sched", "SolverOptions",
+    "Unroll", "build_groups", "partition_all", "partition_memory",
+    "rank_solutions", "solve", "unroll",
+]

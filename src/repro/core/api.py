@@ -1,0 +1,97 @@
+"""Top-level banking API (paper Fig. 1: accesses + concurrency -> scheme).
+
+``partition_memory`` is the end-to-end pipeline:
+
+    program (controller tree)
+      -> unroll                (Sec 2.4.3: lanes + UIDs + synchronization)
+      -> build_groups          (Sec 3.2, Fig. 8)
+      -> solve                 (Sec 3.3: candidate geometries, validity)
+      -> transforms            (Sec 3.4: applied inside solve)
+      -> rank                  (Sec 3.5: ML cost model; proxy fallback)
+      -> best BankingSolution
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .controller import Program, UnrolledProgram, unroll
+from .grouping import build_groups
+from .polytope import AccessGroup, Iterator, MemorySpec
+from .solver import BankingSolution, SolverOptions, solve
+
+
+@dataclass
+class BankingReport:
+    memory: str
+    groups: List[AccessGroup]
+    solutions: List[BankingSolution]
+    best: Optional[BankingSolution]
+    solve_seconds: float
+    num_candidates: int
+
+    def table_row(self) -> Dict[str, float]:
+        r = self.best.resources.total if self.best and self.best.resources else None
+        return {
+            "memory": self.memory,
+            "lut": r.lut if r else float("nan"),
+            "ff": r.ff if r else float("nan"),
+            "bram": r.bram if r else 0,
+            "dsp": r.dsp if r else 0,
+            "banks": self.best.num_banks if self.best else 0,
+            "seconds": self.solve_seconds,
+        }
+
+
+def rank_solutions(
+    sols: List[BankingSolution],
+    scorer: Optional[Callable[[BankingSolution], float]] = None,
+) -> List[BankingSolution]:
+    """Order candidate schemes best-first.
+
+    ``scorer`` is normally the ML cost model (core.cost_model.MLScorer);
+    without one we fall back to the weighted resource proxy -- this fallback
+    is exactly the 'first-order rules' behaviour the paper improves upon.
+    """
+    for s in sols:
+        if scorer is not None:
+            s.score = float(scorer(s))
+        elif s.resources is not None:
+            s.score = s.resources.total.weighted()
+    return sorted(sols, key=lambda s: s.score)
+
+
+def partition_memory(
+    program: Program,
+    memory: str,
+    opts: Optional[SolverOptions] = None,
+    scorer: Optional[Callable[[BankingSolution], float]] = None,
+) -> BankingReport:
+    t0 = time.perf_counter()
+    up = unroll(program)
+    groups = build_groups(up, memory)
+    mem = program.memories[memory]
+    sols = solve(mem, groups, up.iterators, opts)
+    ranked = rank_solutions(sols, scorer)
+    dt = time.perf_counter() - t0
+    return BankingReport(
+        memory=memory,
+        groups=groups,
+        solutions=ranked,
+        best=ranked[0] if ranked else None,
+        solve_seconds=dt,
+        num_candidates=len(sols),
+    )
+
+
+def partition_all(
+    program: Program,
+    opts: Optional[SolverOptions] = None,
+    scorer: Optional[Callable[[BankingSolution], float]] = None,
+) -> Dict[str, BankingReport]:
+    return {
+        name: partition_memory(program, name, opts, scorer)
+        for name in program.memories
+    }

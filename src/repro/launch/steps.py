@@ -1,0 +1,38 @@
+"""Step functions shared by the trainer, server, and dry-run."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import Model
+from ..optim import adamw
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_state = adamw.update(opt_cfg, grads, opt_state, params)
+        return loss, new_params, new_state
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode(params, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_cache
+
+    return serve_step

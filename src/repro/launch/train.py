@@ -1,0 +1,65 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real cluster each host runs this under its own process index
+(``jax.distributed.initialize`` is called when the standard cluster env
+vars are present); in this container it runs single-process.  ``--smoke``
+uses the reduced config so any architecture trains on CPU.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+        --steps 30
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--bf16-opt", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # multi-host bring-up: no-op single-process, auto-configured under a
+    # cluster launcher (GKE/Borg set the coordinator env vars)
+    if os.environ.get("COORDINATOR_ADDRESS"):
+        import jax
+        jax.distributed.initialize()
+
+    from ..configs import get_arch
+    from ..data.pipeline import DataConfig
+    from ..models import get_model
+    from ..optim import adamw
+    from ..runtime.trainer import TrainConfig, train
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+    data_cfg = DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed, frames_dim=cfg.d_model if cfg.family == "encdec" else 0)
+    train_cfg = TrainConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir or f"/tmp/repro_{cfg.name}")
+    opt_cfg = adamw.AdamWConfig(lr_peak=args.lr,
+                                warmup_steps=max(args.steps // 10, 1),
+                                total_steps=args.steps)
+    out = train(model, data_cfg, train_cfg, opt_cfg, seed=args.seed)
+    losses = out["losses"]
+    print(f"done: {len(losses)} steps, loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}, stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

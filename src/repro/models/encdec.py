@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D) -- in real Whisper these come
+from two strided Conv1d layers over an 80-bin mel spectrogram.  The
+transformer backbone (6L enc + 6L dec, d=512, 8H, ff=2048, vocab 51865) is
+implemented fully: bidirectional encoder, causal decoder with cross
+attention, learned-sinusoid positions folded into RoPE for uniformity
+(noted in DESIGN.md; Whisper itself uses absolute positions + LayerNorm --
+structurally equivalent for sizing/dry-run purposes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.hints import hint
+from .layers import (apply_rope, chunked_attention, dense_init, gelu_mlp,
+                     rms_norm, split_keys)
+from . import transformer as tfm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _attn_params(key, D, H, Hkv, Dh, dtype):
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (D, H * Dh), dtype=dtype),
+        "wk": dense_init(ks[1], (D, Hkv * Dh), dtype=dtype),
+        "wv": dense_init(ks[2], (D, Hkv * Dh), dtype=dtype),
+        "wo": dense_init(ks[3], (H * Dh, D), dtype=dtype),
+    }
+
+
+def _mlp_params(key, D, F, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "w_up": dense_init(ks[0], (D, F), dtype=dtype),
+        "b_up": jnp.zeros((F,), dtype),
+        "w_down": dense_init(ks[1], (F, D), dtype=dtype),
+        "b_down": jnp.zeros((D,), dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    D, H, Hkv, Dh, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                        cfg.d_ff)
+    Lenc = cfg.n_encoder_layers or cfg.n_layers
+    Ldec = cfg.n_layers
+    ks = split_keys(key, Lenc + 2 * Ldec + 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.zeros((D,), dtype), "ln2": jnp.zeros((D,), dtype),
+                "attn": _attn_params(k1, D, H, Hkv, Dh, dtype),
+                "mlp": _mlp_params(k2, D, F, dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.zeros((D,), dtype), "ln2": jnp.zeros((D,), dtype),
+                "ln3": jnp.zeros((D,), dtype),
+                "self": _attn_params(k1, D, H, Hkv, Dh, dtype),
+                "cross": _attn_params(k2, D, H, Hkv, Dh, dtype),
+                "mlp": _mlp_params(k3, D, F, dtype)}
+
+    enc = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[enc_layer(k) for k in ks[:Lenc]])
+    dec = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[dec_layer(k) for k in ks[Lenc:Lenc + Ldec]])
+    return {
+        "embed": dense_init(ks[-1], (cfg.vocab, D), scale=0.02, dtype=dtype),
+        "ln_enc": jnp.zeros((D,), dtype),
+        "ln_f": jnp.zeros((D,), dtype),
+        "enc": enc,
+        "dec": dec,
+    }
+
+
+def _mha(cfg, ap, xq, xkv, *, causal, q_offset=0, kv_len=None, block_k=1024):
+    B, Sq, D = xq.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (xq @ ap["wq"]).reshape(B, Sq, H, Dh)
+    k = (xkv @ ap["wk"]).reshape(B, xkv.shape[1], Hkv, Dh)
+    v = (xkv @ ap["wv"]).reshape(B, xkv.shape[1], Hkv, Dh)
+    q = apply_rope(q, jnp.arange(Sq) + q_offset, cfg.rope_theta)
+    k = apply_rope(k, jnp.arange(k.shape[1]), cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                            kv_len=kv_len, block_k=block_k)
+    return out.reshape(B, Sq, H * Dh) @ ap["wo"], (k, v)
+
+
+def encode(cfg: ArchConfig, params: Params, frames: Array,
+           block_k: int = 1024) -> Array:
+    """frames: precomputed embeddings (B, S_enc, D) -- frontend stub."""
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = _mha(cfg, lp["attn"], h, h, causal=False, block_k=block_k)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + gelu_mlp(h, lp["mlp"]["w_up"], lp["mlp"]["b_up"],
+                         lp["mlp"]["w_down"], lp["mlp"]["b_down"])
+        return hint(x, "residual"), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, frames, params["enc"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(cfg: ArchConfig, params: Params, enc_out: Array,
+                 tokens: Array, block_k: int = 1024) -> Array:
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = _mha(cfg, lp["self"], h, h, causal=True, block_k=block_k)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        a, _ = _mha(cfg, lp["cross"], h, enc_out, causal=False, block_k=block_k)
+        x = x + a
+        h = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + gelu_mlp(h, lp["mlp"]["w_up"], lp["mlp"]["b_up"],
+                         lp["mlp"]["w_down"], lp["mlp"]["b_down"])
+        return hint(x, "residual"), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def lm_loss(cfg: ArchConfig, params: Params, batch: Dict[str, Array]) -> Array:
+    enc_out = encode(cfg, params, batch["frames"].astype(jnp.bfloat16))
+    h = decode_train(cfg, params, enc_out, batch["tokens"])
+    return tfm.chunked_xent(cfg, params, h, batch["labels"])
+
+
+class EncDecCache(NamedTuple):
+    k_self: Array   # (L, B, Smax, Hkv, Dh)
+    v_self: Array
+    k_cross: Array  # (L, B, S_enc, Hkv, Dh) -- computed once at prefill
+    v_cross: Array
+    pos: Array
+
+
+def prefill(cfg: ArchConfig, params: Params, frames: Array, tokens: Array,
+            max_len: int, block_k: int = 1024) -> Tuple[Array, EncDecCache]:
+    """Encode audio + run the decoder prompt; cache self+cross KV."""
+    enc_out = encode(cfg, params, frames.astype(jnp.bfloat16), block_k)
+    B, S = tokens.shape
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, (k_s, v_s) = _mha(cfg, lp["self"], h, h, causal=True,
+                             block_k=block_k)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        a, (k_c, v_c) = _mha(cfg, lp["cross"], h, enc_out, causal=False,
+                             block_k=block_k)
+        x = x + a
+        h = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + gelu_mlp(h, lp["mlp"]["w_up"], lp["mlp"]["b_up"],
+                         lp["mlp"]["w_down"], lp["mlp"]["b_down"])
+        pad = max_len - S
+        k_s = jnp.pad(k_s, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_s = jnp.pad(v_s, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (k_s, v_s, k_c, v_c)
+
+    x, (ks, vs, kc, vc) = jax.lax.scan(body, x, params["dec"])
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = tfm.logits_fn(cfg, params, h[:, -1:])[:, 0]
+    return logits, EncDecCache(ks, vs, kc, vc, jnp.asarray(S, jnp.int32))
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: EncDecCache,
+                tokens: Array, block_k: int = 1024
+                ) -> Tuple[Array, EncDecCache]:
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    pos = cache.pos
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def body(x, xs):
+        lp, k_s, v_s, k_c, v_c = xs
+        B, S, D = x.shape
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        k_new = (h @ lp["self"]["wk"]).reshape(B, S, Hkv, Dh)
+        v_new = (h @ lp["self"]["wv"]).reshape(B, S, Hkv, Dh)
+        k_new = apply_rope(k_new, jnp.arange(S) + pos, cfg.rope_theta)
+        k_s = jax.lax.dynamic_update_slice(k_s, k_new.astype(k_s.dtype),
+                                           (0, pos, 0, 0))
+        v_s = jax.lax.dynamic_update_slice(v_s, v_new.astype(v_s.dtype),
+                                           (0, pos, 0, 0))
+        q = (h @ lp["self"]["wq"]).reshape(B, S, H, Dh)
+        q = apply_rope(q, jnp.arange(S) + pos, cfg.rope_theta)
+        a = chunked_attention(q, k_s, v_s, causal=True, q_offset=pos,
+                              kv_len=pos + 1, block_k=block_k)
+        x = x + a.reshape(B, S, H * Dh) @ lp["self"]["wo"]
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        q = (h @ lp["cross"]["wq"]).reshape(B, S, H, Dh)
+        q = apply_rope(q, jnp.arange(S) + pos, cfg.rope_theta)
+        a = chunked_attention(q, k_c, v_c, causal=False, block_k=block_k)
+        x = x + a.reshape(B, S, H * Dh) @ lp["cross"]["wo"]
+        h = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + gelu_mlp(h, lp["mlp"]["w_up"], lp["mlp"]["b_up"],
+                         lp["mlp"]["w_down"], lp["mlp"]["b_down"])
+        return x, (k_s, v_s)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec"], cache.k_self, cache.v_self,
+                  cache.k_cross, cache.v_cross))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = tfm.logits_fn(cfg, params, h)[:, 0]
+    return logits, EncDecCache(k_new, v_new, cache.k_cross, cache.v_cross,
+                               pos + 1)

@@ -1,0 +1,172 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a shared attention block.
+
+Zamba2 interleaves Mamba2 blocks with a *single shared* transformer block
+re-applied at several depths (arXiv:2411.15242).  We scan over groups of
+``hybrid_period`` SSM layers; after each group the shared attention block
+(one parameter set, per-site KV cache) runs.  Sites = n_layers // period.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.hints import hint
+from .layers import dense_init, rms_norm, split_keys, swiglu
+from . import ssm as ssm_mod
+from . import transformer as tfm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def n_sites(cfg: ArchConfig) -> int:
+    return max(1, cfg.n_layers // max(1, cfg.hybrid_period))
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    L = cfg.n_layers
+    G = n_sites(cfg)
+    per = L // G
+    ks = split_keys(key, L + 8)
+    ssm_layers = jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape((G, per) + xs[0].shape),
+        *[ssm_mod.init_ssm_layer(cfg, k, dtype) for k in ks[:L]])
+    D, H, Hkv, Dh, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                        cfg.d_ff)
+    sk = split_keys(ks[L], 8)
+    shared = {
+        "ln1": jnp.zeros((D,), dtype), "ln2": jnp.zeros((D,), dtype),
+        "wq": dense_init(sk[0], (D, H * Dh), dtype=dtype),
+        "wk": dense_init(sk[1], (D, Hkv * Dh), dtype=dtype),
+        "wv": dense_init(sk[2], (D, Hkv * Dh), dtype=dtype),
+        "wo": dense_init(sk[3], (H * Dh, D), dtype=dtype),
+        "w_gate": dense_init(sk[4], (D, F), dtype=dtype),
+        "w_up": dense_init(sk[5], (D, F), dtype=dtype),
+        "w_down": dense_init(sk[6], (F, D), dtype=dtype),
+    }
+    return {
+        "embed": dense_init(ks[L + 1], (cfg.vocab, D), scale=0.02, dtype=dtype),
+        "ln_f": jnp.zeros((D,), dtype),
+        "ssm": ssm_layers,       # stacked (G, per, ...)
+        "shared_attn": shared,   # single parameter set, reused at G sites
+    }
+
+
+class HybridCache(NamedTuple):
+    conv: Array    # (G, per, B, W-1, conv_dim)
+    state: Array   # (G, per, B, H, P, N)
+    k: Array       # (G, B, Smax, Hkv, Dh) -- per-site KV for the shared block
+    v: Array
+    pos: Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> HybridCache:
+    d_inner, H, P, N = ssm_mod.dims(cfg)
+    conv_dim = d_inner + 2 * N
+    G = n_sites(cfg)
+    per = cfg.n_layers // G
+    return HybridCache(
+        jnp.zeros((G, per, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        jnp.zeros((G, per, batch, H, P, N), jnp.float32),
+        jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def _group_body(cfg: ArchConfig, shared, *, streaming: bool, block_k: int):
+    """Returns the scan body over groups: per-group SSM stack + shared attn."""
+
+    def body(carry, xs):
+        x, pos = carry
+        if streaming:
+            lp_g, conv_g, ssm_g, kc, vc = xs
+        else:
+            lp_g, = xs
+            conv_g = ssm_g = kc = vc = None
+
+        def inner(xc, inner_xs):
+            if streaming:
+                lp, conv_c, ssm_c = inner_xs
+                xc, (conv_c, ssm_c) = ssm_mod.ssm_block(
+                    cfg, lp, xc, conv_state=conv_c, ssm_state=ssm_c,
+                    streaming=True)
+                return xc, (conv_c, ssm_c)
+            lp, = inner_xs
+            xc, _ = ssm_mod.ssm_block(cfg, lp, xc)
+            return xc, None
+
+        if streaming:
+            x, (conv_new, ssm_new) = jax.lax.scan(inner, x, (lp_g, conv_g, ssm_g))
+            x, (k_new, v_new) = tfm.dense_layer(
+                cfg, shared, x, 0, cache_kv=(kc, vc), pos=pos, block_k=block_k)
+            return (x, pos), (conv_new, ssm_new, k_new, v_new)
+        x, _ = jax.lax.scan(inner, x, (lp_g,))
+        x, (k, v) = tfm.dense_layer(cfg, shared, x, 0, block_k=block_k)
+        return (hint(x, "residual"), pos), (k, v)
+
+    return body
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: Array,
+            block_k: int = 1024) -> Array:
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    body = jax.checkpoint(
+        _group_body(cfg, params["shared_attn"], streaming=False,
+                    block_k=block_k), prevent_cse=False)
+    (x, _), _ = jax.lax.scan(body, (x, 0), (params["ssm"],))
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def lm_loss(cfg: ArchConfig, params: Params, batch: Dict[str, Array]) -> Array:
+    h = forward(cfg, params, batch["tokens"])
+    return tfm.chunked_xent(cfg, params, h, batch["labels"])
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: HybridCache,
+                tokens: Array, block_k: int = 1024
+                ) -> Tuple[Array, HybridCache]:
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    body = _group_body(cfg, params["shared_attn"], streaming=True,
+                       block_k=block_k)
+    (x, _), (conv_new, ssm_new, k_new, v_new) = jax.lax.scan(
+        body, (x, cache.pos),
+        (params["ssm"], cache.conv, cache.state, cache.k, cache.v))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = tfm.logits_fn(cfg, params, h)[:, 0]
+    return logits, HybridCache(conv_new, ssm_new, k_new, v_new, cache.pos + 1)
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: Array, max_len: int,
+            block_k: int = 1024) -> Tuple[Array, HybridCache]:
+    B, S = tokens.shape
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+
+    def body(carry, xs):
+        x, pos = carry
+        lp_g, = xs
+
+        def inner(xc, lp):
+            xc, (conv_c, ssm_c) = ssm_mod.ssm_block(cfg, lp, xc)
+            return xc, (conv_c, ssm_c)
+
+        x, (conv_new, ssm_new) = jax.lax.scan(inner, x, lp_g)
+        x, (k, v) = tfm.dense_layer(cfg, params["shared_attn"], x, 0,
+                                    block_k=block_k)
+        pad = max_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return (x, pos), (conv_new, ssm_new, k, v)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (x, _), (conv_new, ssm_new, ks, vs) = jax.lax.scan(
+        body, (x, 0), (params["ssm"],))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = tfm.logits_fn(cfg, params, h[:, -1:])[:, 0]
+    return logits, HybridCache(conv_new, ssm_new, ks, vs,
+                               jnp.asarray(S, jnp.int32))

@@ -1,0 +1,229 @@
+"""Shared model layers: norms, RoPE, chunked-online-softmax attention, MLPs.
+
+Attention is implemented as a ``lax.scan`` over KV blocks with online
+softmax (flash-attention algorithm in pure JAX).  This never materializes
+the (S, S) score matrix, lowers through the SPMD partitioner cleanly (unlike
+``pallas_call``, which needs Mosaic), and supports causal + sliding-window
+masks computed from iota per block.  The Pallas flash kernel
+(repro.kernels.flash_attention) implements the same math for TPU execution
+and is validated against the same reference; ``attn_impl`` selects it.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: Array, w_up: Array, b_up: Array, w_down: Array, b_down: Array) -> Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up) + b_up)
+    return jnp.einsum("...f,fd->...d", h, w_down) + b_down
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (online softmax over KV blocks)
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos: Array, k_pos: Array, causal: bool, window: Array | int
+                ) -> Array:
+    """(Sq, Bk) mask from absolute positions; window <= 0 means unlimited."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= dk <= dq
+    w = jnp.asarray(window)
+    ok &= jnp.where(w > 0, dq - dk < w, True)
+    return ok
+
+
+def decode_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                     kv_len=None, scale=None) -> Array:
+    """Sq<=4 fast path: one grouped einsum over the WHOLE KV buffer.
+
+    No block scan => a sequence-sharded KV cache shards cleanly (partial
+    softmax stats reduce with one small all-reduce); the score tensor is
+    only (B, Sq, H, Sk) for a handful of q rows.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    q5 = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, rep, Dh)
+    s = jnp.einsum("bqhrd,bkhd->bqhrk", q5, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    mask = _block_mask(q_pos, k_pos, causal, window)
+    if kv_len is not None:
+        mask &= (k_pos < kv_len)[None, :]
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bqhrk,bkhd->bqhrd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def chunked_attention(
+    q: Array,                # (B, Sq, H, Dh)
+    k: Array,                # (B, Sk, Hkv, Dh)
+    v: Array,                # (B, Sk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: Array | int = 0,         # sliding window (tokens); 0 = full
+    q_offset: Array | int = 0,       # absolute position of q[0] (decode)
+    kv_len: Optional[Array] = None,  # valid KV prefix length (decode cache)
+    block_k: int = 1024,
+    block_q: int = 512,
+    scale: Optional[float] = None,
+) -> Array:
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    if Sq <= 4 and Sk > block_k:
+        return decode_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset, kv_len=kv_len, scale=scale)
+    if Sq > block_q and Sq % block_q == 0:
+        # outer q-blocking bounds the score working set to
+        # (B, block_q, H, block_k) per step regardless of sequence length
+        nqb = Sq // block_q
+        qb = jnp.moveaxis(q.reshape(B, nqb, block_q, H, Dh), 1, 0)
+
+        def one(args):
+            qi, i = args
+            return chunked_attention(
+                qi, k, v, causal=causal, window=window,
+                q_offset=q_offset + i * block_q, kv_len=kv_len,
+                block_k=block_k, block_q=block_q, scale=scale)
+
+        out = jax.lax.map(one, (qb, jnp.arange(nqb)))
+        return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, Dh)
+
+    nblk = -(-Sk // block_k)
+    pad = nblk * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_k, Hkv, Dh)
+    vb = v.reshape(B, nblk, block_k, Hkv, Dh)
+
+    # grouped-query layout: (B, Sq, Hkv, rep, Dh) so KV is never re-folded
+    q5 = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, rep, Dh)
+    q_pos = jnp.arange(Sq) + q_offset
+    valid_k = jnp.asarray(Sk if kv_len is None else kv_len)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, bidx = blk  # (B, Hkv, blk, Dh)
+        k_pos = bidx * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqhrd,bhkd->bqhrk", q5, kblk.astype(jnp.float32))
+        mask = _block_mask(q_pos, k_pos, causal, window)
+        mask &= (k_pos < valid_k)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhrk,bhkd->bqhrd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, rep), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, rep, Dh), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0).transpose(0, 1, 3, 2, 4)  # (nblk, B, Hkv, blk, Dh)
+    vb_t = jnp.moveaxis(vb, 1, 0).transpose(0, 1, 3, 2, 4)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb_t, vb_t, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_len=None, scale=None) -> Array:
+    """Reference implementation (materializes scores) -- small shapes only."""
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   kr.astype(jnp.float32))
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    mask = _block_mask(q_pos, k_pos, causal, window)
+    if kv_len is not None:
+        mask &= (k_pos < kv_len)[None, :]
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+ATTN_IMPLS = {"chunked": chunked_attention, "naive": naive_attention}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

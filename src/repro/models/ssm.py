@@ -1,0 +1,255 @@
+"""Mamba2 (state-space duality / SSD) language model.
+
+Implements the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): within a
+chunk of length Q the recurrence is computed in matrix form (MXU-friendly
+matmuls); across chunks a ``lax.scan`` carries the (B, H, P, N) state.  The
+Pallas kernel ``repro.kernels.ssd_chunk`` implements the same chunk math
+with VMEM tiling; this file is the pure-jnp model (and the kernel's oracle).
+
+The paper's banking technique applies to the *state tensors*, not attention
+(mamba2 is attention-free -- see DESIGN.md Arch-applicability): the solver
+banks the (H, P, N) state across the model axis.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.hints import hint
+from .layers import dense_init, rms_norm, split_keys
+from . import transformer as tfm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_ssm_layer(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    D = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N  # conv over [x, B, C]
+    ks = split_keys(key, 6)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "in_proj": dense_init(ks[0], (D, 2 * d_inner + 2 * N + H), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), scale=0.2, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_ln": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, D), dtype=dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    L = cfg.n_layers
+    ks = split_keys(key, L + 2)
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[init_ssm_layer(cfg, k, dtype) for k in ks[:L]])
+    return {
+        "embed": dense_init(ks[L], (cfg.vocab, cfg.d_model), scale=0.02, dtype=dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "layers": layers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array = None):
+    """Depthwise causal conv, window ssm_conv.  x (B, S, C); w (W, C).
+    ``state`` (B, W-1, C) carries the tail for streaming decode."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int, init_state: Array = None
+                ) -> Tuple[Array, Array]:
+    """SSD scan.  x (B,S,H,P), dt (B,S,H) (post-softplus), A (H,) negative,
+    Bm/Cm (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # zero-pad the tail: dt=0 rows have decay exp(0)=1 and add nothing
+        # to the state; their y rows are dropped before returning.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A  # (B, nc, Q, H), negative
+    cum = jnp.cumsum(dA, axis=2)  # running log-decay within chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        xq, dtq, bq, cq, dAq, cumq = inp  # per-chunk slices
+        # decay matrix L[i,j] = exp(cum_i - cum_j) for i >= j (per head)
+        rel = cumq[:, :, None, :] - cumq[:, None, :, :]   # (B, Q, Q, H)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask BEFORE exp: masked entries have rel > 0 and would overflow,
+        # poisoning the backward (inf * 0 = nan in the where-grad)
+        rel = jnp.where(causal[None, :, :, None], rel, -jnp.inf)
+        Lmat = jnp.exp(rel)
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)        # (B, Q, Q)
+        W = scores[..., None] * Lmat                       # (B, Q, Q, H)
+        xdt = xq * dtq[..., None]                          # dt-weighted input
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xdt)
+        # contribution of carried-in state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, state, jnp.exp(cumq))
+        # state update
+        decay_to_end = jnp.exp(cumq[:, -1:, :] - cumq)     # (B, Q, H)
+        s_add = jnp.einsum("bjn,bjhp,bjh->bhpn", bq, xdt, decay_to_end)
+        state = state * jnp.exp(cumq[:, -1])[:, :, None, None] + s_add
+        return state, y_intra + y_inter
+
+    xs = (
+        jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dtc, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Cc, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dA, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S_pad, H, P)[:, :S]
+    return y, state
+
+
+def ssm_block(cfg: ArchConfig, lp, x: Array, *, conv_state=None,
+              ssm_state=None, streaming=False):
+    """One Mamba2 block.  x (B, S, D).  Streaming mode threads conv/ssm
+    states (decode); otherwise states start at zero (train/prefill)."""
+    Bsz, S, D = x.shape
+    d_inner, H, P, N = dims(cfg)
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    proj = h @ lp["in_proj"]  # (B, S, 2*d_inner + 2N + H)
+    z, xin, bc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, lp["conv_w"], lp["conv_b"],
+                                      conv_state)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    xh = xin.reshape(Bsz, S, H, P)
+    if streaming and S == 1:
+        # O(1) recurrence for single-token decode
+        dA = jnp.exp(dt[:, 0] * A)  # (B, H)
+        xdt = xh[:, 0] * dt[:, 0, :, None]
+        s_add = jnp.einsum("bn,bhp->bhpn", Bm[:, 0].astype(jnp.float32),
+                           xdt.astype(jnp.float32))
+        state = ssm_state * dA[..., None, None] + s_add
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)
+        y = y[:, None]  # (B, 1, H, P)
+        new_state = state
+    else:
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, ssm_state)
+    y = y + lp["D_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), lp["gate_ln"], cfg.norm_eps)
+    out = y @ lp["out_proj"]
+    return x + out, (new_conv, new_state)
+
+
+# ---------------------------------------------------------------------------
+# LM wrappers
+# ---------------------------------------------------------------------------
+
+
+class SSMCache(NamedTuple):
+    conv: Array   # (L, B, W-1, conv_dim)
+    state: Array  # (L, B, H, P, N)
+    pos: Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N
+    L = cfg.n_layers
+    return SSMCache(
+        jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        jnp.zeros((L, batch, H, P, N), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: Array) -> Array:
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+
+    def body(x, lp):
+        x, _ = ssm_block(cfg, lp, x)
+        return hint(x, "residual"), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def lm_loss(cfg: ArchConfig, params: Params, batch: Dict[str, Array]) -> Array:
+    h = forward(cfg, params, batch["tokens"])
+    return tfm.chunked_xent(cfg, params, h, batch["labels"])
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: SSMCache,
+                tokens: Array) -> Tuple[Array, SSMCache]:
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+
+    def body(x, xs):
+        lp, conv_c, ssm_c = xs
+        x, (conv_c, ssm_c) = ssm_block(cfg, lp, x, conv_state=conv_c,
+                                       ssm_state=ssm_c, streaming=True)
+        return x, (conv_c, ssm_c)
+
+    x, (conv_new, state_new) = jax.lax.scan(
+        body, x, (params["layers"], cache.conv, cache.state))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = tfm.logits_fn(cfg, params, h)[:, 0]
+    return logits, SSMCache(conv_new, state_new, cache.pos + 1)
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: Array
+            ) -> Tuple[Array, SSMCache]:
+    B, S = tokens.shape
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+
+    def body(x, lp):
+        x, (conv_c, ssm_c) = ssm_block(cfg, lp, x)
+        return x, (conv_c, ssm_c)
+
+    x, (conv_new, state_new) = jax.lax.scan(body, x, params["layers"])
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = tfm.logits_fn(cfg, params, h[:, -1:])[:, 0]
+    return logits, SSMCache(conv_new, state_new, jnp.asarray(S, jnp.int32))

@@ -1,0 +1,106 @@
+"""AdamW with cosine schedule, global-norm clipping, and ZeRO-1 sharding.
+
+Pure-pytree implementation (no optax in this container).  Optimizer state
+(m, v, and the fp32 master copy when params are bf16) is sharded one step
+finer than the params -- the extra 'data'-axis cut is ZeRO-1: every
+data-parallel rank owns 1/|data| of the optimizer state.  The specs come
+from ``zero1_specs``; the trainer installs them as out_shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 master params (None leaves when params already fp32)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: Any, moment_dtype=jnp.float32) -> AdamWState:
+    """moment_dtype=bf16 halves optimizer-state HBM (m, v only; the master
+    copy stays fp32 -- the moments tolerate low precision, the weights'
+    accumulation does not)."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    master = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype == jnp.bfloat16 else p,
+        params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any
+           ) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        mdt = m.dtype
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh, vh = m32 / b1c, v32 / b2c
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return (new_master.astype(p.dtype), m32.astype(mdt),
+                v32.astype(mdt), new_master)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, state.master, params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_master = jax.tree.map(lambda t: t[3], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_m, new_v, new_master)
+
+
+def zero1_specs(pspecs: Any) -> AdamWState:
+    """Optimizer-state specs: params' specs with an extra 'data' cut on the
+    largest unsharded dim would require shape info; ZeRO-1 here simply
+    inherits the param spec (already model- and possibly data-cut) -- the
+    m/v/master tensors never need gathering, so inheriting is sufficient
+    and safe for any mesh."""
+    return AdamWState(step=P(), m=pspecs,
+                      v=jax.tree.map(lambda s: s, pspecs), master=pspecs)

@@ -1,0 +1,54 @@
+"""Named activation-sharding hints.
+
+Models call ``hint(x, "residual")`` at layout-critical points; the trainer /
+dry-run installs a policy mapping hint names to PartitionSpecs for the
+current (arch x shape x mesh) cell.  Without a policy the calls are no-ops,
+so smoke tests and single-device runs are untouched.
+
+This is the activation-side twin of the parameter banking bridge: the
+policy for each cell is part of the solution the Perf loop iterates on
+(EXPERIMENTS.md records before/after per hint change).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_LOCAL = threading.local()
+
+
+def _policy() -> Optional[Dict[str, PartitionSpec]]:
+    return getattr(_LOCAL, "policy", None)
+
+
+@contextmanager
+def sharding_policy(policy: Dict[str, PartitionSpec]):
+    old = _policy()
+    _LOCAL.policy = policy
+    try:
+        yield
+    finally:
+        _LOCAL.policy = old
+
+
+def hint(x, name: str):
+    pol = _policy()
+    if pol is None:
+        return x
+    spec = pol.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def policy_value(name: str, default=None):
+    """Non-spec policy entries (e.g. '__mesh__' for shard_map impls)."""
+    pol = _policy()
+    if pol is None:
+        return default
+    return pol.get(name, default)

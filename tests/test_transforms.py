@@ -1,0 +1,81 @@
+"""Exactness + resource properties of the Sec-3.4 datapath transforms."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transforms as T
+
+
+IN_BITS = 20
+XS = st.integers(min_value=0, max_value=(1 << IN_BITS) - 1)
+
+
+@given(XS, st.integers(min_value=1, max_value=65))
+@settings(max_examples=60, deadline=None)
+def test_mod_const_exact(x, c):
+    node = T.mod_const(T.var("x"), c, in_bits=IN_BITS)
+    assert T.evaluate(node, {"x": x}) == x % c
+
+
+@given(XS, st.integers(min_value=1, max_value=65))
+@settings(max_examples=60, deadline=None)
+def test_div_const_exact(x, c):
+    node = T.div_const(T.var("x"), c, in_bits=IN_BITS)
+    assert T.evaluate(node, {"x": x}) == x // c
+
+
+@given(XS, st.integers(min_value=-65, max_value=65))
+@settings(max_examples=60, deadline=None)
+def test_mul_const_exact(x, c):
+    node = T.mul_const(T.var("x"), c, R=4)
+    assert T.evaluate(node, {"x": x}) == x * c
+
+
+@pytest.mark.parametrize("c", [2, 3, 4, 7, 8, 15, 16, 31, 32, 63])
+def test_friendly_constants_are_dsp_free(c):
+    """Crandall/pow2/NAF rewrites must leave no raw mul/div/mod."""
+    for build, _ in [(T.mod_const, "%"), (T.div_const, "/")]:
+        node = build(T.var("x"), c, in_bits=IN_BITS)
+        raw = T.count_raw_ops(node)
+        assert raw["div"] == 0 and raw["mod"] == 0, (c, raw)
+
+
+@pytest.mark.parametrize("c", [5, 9, 21])  # divide Mersenne numbers (Eq. 6)
+def test_mersenne_multiple_mod(c):
+    nk = T.mersenne_multiple(c)
+    assert nk is not None
+    node = T.mod_const(T.var("x"), c, in_bits=IN_BITS)
+    assert T.count_raw_ops(node)["mod"] == 0
+    for x in range(0, 1 << IN_BITS, 9973):
+        assert T.evaluate(node, {"x": x}) == x % c
+
+
+def test_transform_cost_below_raw():
+    """Transforms trade DSPs (scarce) for LUT adders; weighted cost drops."""
+    w = 16
+    for c in (3, 7, 15, 31):
+        full = T.cost(T.mod_const(T.var("x"), c, in_bits=w), w)
+        raw = T.cost(T.raw_mod(T.var("x"), c), w)
+        assert full.dsp == 0 and raw.dsp > 0
+        assert full.lut + 120 * full.dsp < raw.lut + 120 * raw.dsp
+
+
+def test_lower_jnp_matches_evaluate():
+    import jax.numpy as jnp
+    node = T.mod_const(T.div_const(T.var("x"), 3, in_bits=IN_BITS), 7,
+                       in_bits=IN_BITS)
+    fn = T.lower_jnp(node)
+    xs = np.arange(0, 5000, 13, dtype=np.int32)
+    got = np.asarray(fn(x=jnp.asarray(xs)))
+    want = (xs // 3) % 7
+    np.testing.assert_array_equal(got, want)
+
+
+def test_naf_digits():
+    for c in range(1, 200):
+        digits = T.naf_digits(c)
+        assert sum(s * (1 << e) for s, e in digits) == c
+        # non-adjacency property
+        es = sorted(e for _, e in digits)
+        assert all(b - a >= 2 for a, b in zip(es, es[1:]))
