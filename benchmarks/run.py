@@ -114,16 +114,35 @@ def bench_kernels() -> None:
 
 def bench_solver() -> None:
     from repro.core import problems
-    from repro.core.api import partition_memory
+    from repro.core.planner import BankingPlanner
 
+    planner = BankingPlanner()
     print("\n=== Solver latency per benchmark problem ===")
     for app in list(problems.STENCILS) + ["sw", "spmv", "sgd", "md_grid"]:
         prog = problems.build(app)
         memname = list(prog.memories)[0]
         t0 = time.perf_counter()
-        rep = partition_memory(prog, memname)
+        plan = planner.plan(prog, memname, use_cache=False)
         us = (time.perf_counter() - t0) * 1e6
-        print(f"solver_{app},{us:.0f},candidates={rep.num_candidates}")
+        print(f"solver_{app},{us:.0f},candidates={plan.num_candidates}")
+
+
+def bench_planner_cache() -> None:
+    """Cold plan vs warm signature-cache hit (the serving-hot-path win)."""
+    from repro.core import problems
+    from repro.core.planner import BankingPlanner
+
+    planner = BankingPlanner()
+    prog = problems.build("sobel")
+    memname = list(prog.memories)[0]
+    t0 = time.perf_counter()
+    planner.plan(prog, memname)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    _, warm_us = _bench_callable(
+        lambda: planner.plan(prog, memname), iters=20, warmup=2)
+    print("\n=== Planner cache (cold solve vs warm hit) ===")
+    print(f"planner_cache,{warm_us:.0f},"
+          f"cold={cold_us:.0f}us;speedup={cold_us / max(warm_us, 1e-9):.0f}x")
 
 
 def main() -> None:
@@ -135,6 +154,7 @@ def main() -> None:
     os.makedirs("results", exist_ok=True)
     print("name,us_per_call,derived")
     bench_solver()
+    bench_planner_cache()
     bench_kernels()
     bench_tables(args.fast)
 

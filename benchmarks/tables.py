@@ -116,23 +116,28 @@ def search_time() -> Dict:
     """Sec 6 claim: 'for problems with massive solution spaces, it can cut
     the time spent searching in half' -- multidim projection regrouping vs
     flat-only exhaustive search on the heavily-parallelized apps."""
+    from repro.core.planner import BankingPlanner
+
+    planner = BankingPlanner()
     out = {}
     for app, kw in [("sgd", dict(par_a=4, par_b=3)),
                     ("spmv", dict(par_r=4, par_c=3)),
                     ("sw", dict(par=8))]:
         prog = problems.build(app, **kw)
         memname = list(prog.memories)[0]
+        # use_cache=False: this figure measures search time, not cache hits
         t0 = time.perf_counter()
-        from repro.core.api import partition_memory
-        rep_md = partition_memory(
-            prog, memname, SolverOptions(allow_multidim=True,
-                                         allow_duplication=False))
+        planner.plan(prog, memname,
+                     opts=SolverOptions(allow_multidim=True,
+                                        allow_duplication=False),
+                     use_cache=False)
         t_md = time.perf_counter() - t0
         t0 = time.perf_counter()
-        rep_flat = partition_memory(
-            prog, memname, SolverOptions(allow_multidim=False,
-                                         allow_duplication=False,
-                                         n_budget=96, n_cap_factor=8))
+        planner.plan(prog, memname,
+                     opts=SolverOptions(allow_multidim=False,
+                                        allow_duplication=False,
+                                        n_budget=96, n_cap_factor=8),
+                     use_cache=False)
         t_flat = time.perf_counter() - t0
         out[app] = {"with_multidim_s": t_md, "flat_only_s": t_flat,
                     "speedup": t_flat / max(t_md, 1e-9)}

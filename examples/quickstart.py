@@ -1,14 +1,20 @@
-"""Quickstart: partition a memory with the banking system, inspect the
-chosen scheme, and run the banked-gather Pallas kernel against it.
+"""Quickstart: plan a memory partitioning with the BankingPlanner (the
+front door of the banking system), inspect the chosen scheme, round-trip
+the plan through JSON, and run the banked-gather Pallas kernel against it.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(The older free functions ``partition_memory`` / ``partition_all`` still
+work but are deprecated shims over this planner.)
 """
+
+import json
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AccessDecl, Counter, Ctrl, MemorySpec, Program,
-                        Sched, partition_memory)
+from repro.core import (AccessDecl, BankingPlan, BankingPlanner, Counter,
+                        Ctrl, MemorySpec, Program, Sched)
 from repro.core.polytope import Affine
 from repro.kernels import ops, ref
 
@@ -25,14 +31,24 @@ def main():
         memories={"table": mem},
     )
 
-    report = partition_memory(program, "table")
-    print(f"groups: {[len(g) for g in report.groups]}")
-    print(f"candidates examined: {report.num_candidates} "
-          f"in {report.solve_seconds*1e3:.1f} ms")
+    planner = BankingPlanner()          # scorer="proxy" by default
+    plan = planner.plan(program, "table")
+    print(f"signature: {plan.signature}")
+    print(f"groups: {[len(g) for g in plan.groups]}")
+    print(f"candidates examined: {plan.num_candidates} "
+          f"in {plan.solve_seconds*1e3:.1f} ms (scorer={plan.scorer_name})")
     print("top 3 schemes:")
-    for s in report.solutions[:3]:
+    for s in plan.solutions[:3]:
         print("  ", s.describe())
-    best = report.best
+
+    # Structurally identical program -> signature-keyed cache hit, no solve.
+    again = planner.plan(program, "table")
+    print(f"replanning the same program: status={again.status} "
+          f"(stats: {planner.stats})")
+
+    # Plans are durable artifacts: JSON round-trip preserves the scheme and
+    # rebuilds the resolution graphs, so a loaded plan drives the kernel.
+    best = BankingPlan.from_json(json.loads(json.dumps(plan.to_json()))).best
 
     # Pack data bank-major per the scheme and gather through the kernel --
     # the bank-resolution arithmetic (Eq. 1-2 + Sec 3.4 rewrites) runs in
@@ -45,7 +61,8 @@ def main():
     got = ops.gather_banked(table, idx, best)
     want = ref.banked_gather_reference(flat, idx)
     assert (np.asarray(got) == np.asarray(want)).all()
-    print(f"banked_gather over {best.num_banks} banks: exact ✓")
+    print(f"banked_gather over {best.num_banks} banks "
+          f"(from the JSON-round-tripped plan): exact ✓")
     raw = best.raw_ops
     print(f"raw mul/div/mod left in resolution arithmetic: {raw} "
           f"(DSP-free: {best.dsp_free})")

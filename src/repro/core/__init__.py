@@ -1,16 +1,36 @@
-"""Core banking system: the paper's contribution as a composable library."""
+"""Core banking system: the paper's contribution as a composable library.
 
-from .api import BankingReport, partition_all, partition_memory, rank_solutions
+The front door is the planner subsystem (``BankingPlanner`` /
+``BankingPlan`` / ``PlanRequest``); the free functions ``partition_memory``
+and ``partition_all`` are deprecated shims kept for compatibility.
+"""
+
+from .api import BankingReport, partition_all, partition_memory
 from .controller import AccessDecl, Counter, Ctrl, Program, Sched, Unroll, unroll
 from .geometry import FlatGeometry, MultiDimGeometry
 from .grouping import build_groups
+from .planner import (
+    BankingPlan,
+    BankingPlanner,
+    PlanRequest,
+    canonical_signature,
+    default_planner,
+    program_signature,
+    rank_solutions,
+    register_scorer,
+    registered_scorers,
+    resolve_scorer,
+)
 from .polytope import Access, AccessGroup, Affine, Iterator, MemorySpec
 from .solver import BankingSolution, SolverOptions, solve
 
 __all__ = [
-    "Access", "AccessDecl", "AccessGroup", "Affine", "BankingReport",
-    "BankingSolution", "Counter", "Ctrl", "FlatGeometry", "Iterator",
-    "MemorySpec", "MultiDimGeometry", "Program", "Sched", "SolverOptions",
-    "Unroll", "build_groups", "partition_all", "partition_memory",
-    "rank_solutions", "solve", "unroll",
+    "Access", "AccessDecl", "AccessGroup", "Affine", "BankingPlan",
+    "BankingPlanner", "BankingReport", "BankingSolution", "Counter", "Ctrl",
+    "FlatGeometry", "Iterator", "MemorySpec", "MultiDimGeometry",
+    "PlanRequest", "Program", "Sched", "SolverOptions", "Unroll",
+    "build_groups", "canonical_signature", "default_planner",
+    "partition_all", "partition_memory", "program_signature",
+    "rank_solutions", "register_scorer", "registered_scorers",
+    "resolve_scorer", "solve", "unroll",
 ]

@@ -1,30 +1,42 @@
-"""Top-level banking API (paper Fig. 1: accesses + concurrency -> scheme).
+"""DEPRECATED free-function banking API -- use ``core.planner`` instead.
 
-``partition_memory`` is the end-to-end pipeline:
+The front door of the banking system is now the **planner subsystem**
+(:mod:`repro.core.planner`): ``BankingPlanner`` produces durable
+``BankingPlan`` artifacts keyed by canonical program signatures, cached
+in memory (and optionally on disk as JSON), ranked through the scorer
+registry (``"proxy"``, ``"ml"``, or any registered callable), and solved
+in parallel across memories by ``plan_all``::
 
-    program (controller tree)
-      -> unroll                (Sec 2.4.3: lanes + UIDs + synchronization)
-      -> build_groups          (Sec 3.2, Fig. 8)
-      -> solve                 (Sec 3.3: candidate geometries, validity)
-      -> transforms            (Sec 3.4: applied inside solve)
-      -> rank                  (Sec 3.5: ML cost model; proxy fallback)
-      -> best BankingSolution
+    from repro.core import BankingPlanner
+
+    planner = BankingPlanner()
+    plan = planner.plan(program, "table")      # cache hit on repeat calls
+    plan.best.describe()
+    plan.save("plans/table.json")              # warm-start a later run
+
+``partition_memory`` / ``partition_all`` below are thin deprecated shims
+over a process-wide default planner, kept so existing snippets keep
+working.  They run the same pipeline (paper Fig. 1: unroll -> build_groups
+-> solve -> rank) but return the legacy ``BankingReport`` container and
+emit a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
-from .controller import Program, UnrolledProgram, unroll
-from .grouping import build_groups
-from .polytope import AccessGroup, Iterator, MemorySpec
-from .solver import BankingSolution, SolverOptions, solve
+from .controller import Program
+from .polytope import AccessGroup
+from .solver import BankingSolution, SolverOptions
+from .planner import default_planner, rank_solutions  # noqa: F401 (re-export)
 
 
 @dataclass
 class BankingReport:
+    """Legacy transient result container (superseded by ``BankingPlan``)."""
+
     memory: str
     groups: List[AccessGroup]
     solutions: List[BankingSolution]
@@ -45,22 +57,13 @@ class BankingReport:
         }
 
 
-def rank_solutions(
-    sols: List[BankingSolution],
-    scorer: Optional[Callable[[BankingSolution], float]] = None,
-) -> List[BankingSolution]:
-    """Order candidate schemes best-first.
-
-    ``scorer`` is normally the ML cost model (core.cost_model.MLScorer);
-    without one we fall back to the weighted resource proxy -- this fallback
-    is exactly the 'first-order rules' behaviour the paper improves upon.
-    """
-    for s in sols:
-        if scorer is not None:
-            s.score = float(scorer(s))
-        elif s.resources is not None:
-            s.score = s.resources.total.weighted()
-    return sorted(sols, key=lambda s: s.score)
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; use repro.core.BankingPlanner "
+        f"(plan / plan_all) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def partition_memory(
@@ -69,21 +72,10 @@ def partition_memory(
     opts: Optional[SolverOptions] = None,
     scorer: Optional[Callable[[BankingSolution], float]] = None,
 ) -> BankingReport:
-    t0 = time.perf_counter()
-    up = unroll(program)
-    groups = build_groups(up, memory)
-    mem = program.memories[memory]
-    sols = solve(mem, groups, up.iterators, opts)
-    ranked = rank_solutions(sols, scorer)
-    dt = time.perf_counter() - t0
-    return BankingReport(
-        memory=memory,
-        groups=groups,
-        solutions=ranked,
-        best=ranked[0] if ranked else None,
-        solve_seconds=dt,
-        num_candidates=len(sols),
-    )
+    """Deprecated shim: one memory through the shared default planner."""
+    _deprecated("partition_memory")
+    return default_planner().plan(program, memory, opts=opts,
+                                  scorer=scorer).to_report()
 
 
 def partition_all(
@@ -91,7 +83,7 @@ def partition_all(
     opts: Optional[SolverOptions] = None,
     scorer: Optional[Callable[[BankingSolution], float]] = None,
 ) -> Dict[str, BankingReport]:
-    return {
-        name: partition_memory(program, name, opts, scorer)
-        for name in program.memories
-    }
+    """Deprecated shim: every memory, via the planner's threaded batch."""
+    _deprecated("partition_all")
+    plans = default_planner().plan_all(program, opts=opts, scorer=scorer)
+    return {name: p.to_report() for name, p in plans.items()}

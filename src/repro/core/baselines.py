@@ -22,8 +22,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from .api import BankingReport, partition_memory, rank_solutions
+from .api import BankingReport
 from .controller import Program, unroll
+from .planner import BankingPlanner
 from .geometry import ConflictCache, FlatGeometry, MultiDimGeometry, \
     flat_conflict_edges, multidim_conflict_edges, _max_conflict_clique
 from .grouping import build_groups
@@ -43,7 +44,8 @@ import time
 def run_ours(program: Program, memory: str,
              scorer=None) -> BankingReport:
     opts = SolverOptions(transform_level="full")
-    return partition_memory(program, memory, opts, scorer)
+    planner = BankingPlanner(opts=opts)
+    return planner.plan(program, memory, scorer=scorer).to_report()
 
 
 def run_baseline_wang14(program: Program, memory: str) -> BankingReport:

@@ -25,12 +25,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import problems
-from .api import partition_memory
 from .controller import Program
 from .features import extract_features
-from .grouping import build_groups
-from .controller import unroll
-from .solver import BankingSolution, SolverOptions, solve
+from .planner import BankingPlanner
+from .solver import BankingSolution, SolverOptions
 
 
 # ---------------------------------------------------------------------------
@@ -140,15 +138,14 @@ class Dataset:
 def build_dataset(seed: int = 0, opts: Optional[SolverOptions] = None,
                   max_per_program: int = 40) -> Dataset:
     opts = opts or SolverOptions(max_solutions=24, n_budget=24)
+    planner = BankingPlanner(opts=opts)
     rows, names = [], []
     labels: Dict[str, List[float]] = {"lut": [], "ff": [], "bram": [], "dsp": []}
     for pname, prog in corpus_programs(seed):
-        up = unroll(prog)
-        for memname, mem in prog.memories.items():
-            groups = build_groups(up, memname)
-            sols = solve(mem, groups, up.iterators, opts)[:max_per_program]
-            for s in sols:
-                rows.append(extract_features(s, groups))
+        for memname in prog.memories:
+            plan = planner.plan(prog, memname)
+            for s in plan.solutions[:max_per_program]:
+                rows.append(extract_features(s, plan.groups))
                 lab = synthetic_pnr(s)
                 for k in labels:
                     labels[k].append(lab[k])

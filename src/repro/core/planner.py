@@ -1,0 +1,705 @@
+"""Plan-oriented front door for the banking system.
+
+The free functions of ``core.api`` re-ran the full
+unroll -> group -> solve -> rank pipeline on every call -- including in the
+serving hot path, where every decode tick poses the *same* KV-pool banking
+problem.  This module makes memory configuration a reusable, durable
+artifact instead of an inline computation:
+
+* ``BankingPlanner.plan`` keys each problem by a **canonical program
+  signature** -- a stable content hash of the unrolled access polytopes
+  (post-grouping), the memory spec, and the solver options -- so
+  structurally identical programs hit a cache instead of re-solving.
+* A ``BankingPlan`` carries the chosen scheme plus provenance (candidates
+  considered, scorer used, solve time) and serializes to/from JSON, so
+  benchmark runs and servers can warm-start from plans on disk
+  (``cache_dir=...`` / ``warm_start``).  Deserialization rebuilds the
+  Sec-3.4 resolution graphs, so a loaded plan drives the Pallas
+  banked-gather kernel exactly like a freshly solved one.
+* Scorers are resolved through a **registry** (``"proxy"``, ``"ml"``, or
+  any callable registered with ``register_scorer``) instead of ad-hoc
+  ``scorer=`` callable threading.
+* ``BankingPlanner.plan_all`` solves independent memories concurrently on
+  a thread pool with a per-memory timeout.
+
+``core.api.partition_memory`` / ``partition_all`` remain as thin deprecated
+shims over a process-wide default planner.
+"""
+
+from __future__ import annotations
+
+import copy
+import hashlib
+import json
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+from .controller import Program, unroll
+from .grouping import build_groups
+from .polytope import AccessGroup, Affine, Iterator, MemorySpec
+from .resources import ResourceEstimate, SchemeResources
+from .solver import (
+    BankingSolution,
+    SolverOptions,
+    _flat_in_bits,
+    solve,
+)
+from .transforms import (
+    Cost,
+    build_flat_resolution,
+    build_multidim_resolution,
+    cost as graph_cost,
+    count_raw_ops,
+)
+
+SIGNATURE_VERSION = 1
+
+ScorerLike = Union[str, Callable[[BankingSolution], float], None]
+
+
+# ---------------------------------------------------------------------------
+# Scorer registry
+# ---------------------------------------------------------------------------
+
+_SCORER_FACTORIES: Dict[str, Callable[[], Optional[Callable]]] = {}
+_SCORER_LOCK = threading.Lock()
+
+
+def register_scorer(name: str,
+                    factory: Callable[[], Optional[Callable]]) -> None:
+    """Register ``factory`` under ``name``.
+
+    ``factory`` is called (once per resolution) to produce a
+    ``BankingSolution -> float`` callable, or ``None`` for the built-in
+    weighted-resource proxy ranking.
+    """
+    with _SCORER_LOCK:
+        _SCORER_FACTORIES[name] = factory
+
+
+def registered_scorers() -> Tuple[str, ...]:
+    return tuple(sorted(_SCORER_FACTORIES))
+
+
+def scorer_key(spec: ScorerLike) -> str:
+    """Cache-key name for a scorer spec, with NO factory side effects.
+
+    Unregistered callables are keyed by name *and* object identity so two
+    different lambdas never alias each other's cached rankings; raises
+    ``ValueError`` for unknown registry names.
+    """
+    if spec is None:
+        spec = "proxy"
+    if callable(spec):
+        name = getattr(spec, "__name__", None) or type(spec).__name__
+        return f"custom:{name}:{id(spec):x}"
+    if spec not in _SCORER_FACTORIES:
+        raise ValueError(
+            f"unknown scorer {spec!r}; registered scorers: "
+            f"{', '.join(registered_scorers())}"
+        )
+    return spec
+
+
+def resolve_scorer(spec: ScorerLike) -> Tuple[str, Optional[Callable]]:
+    """Resolve a scorer spec to ``(name, callable-or-None)``.
+
+    ``None`` means the proxy; a callable passes through; a string looks up
+    the registry (invoking its factory) and raises ``ValueError`` for
+    unknown names.
+    """
+    name = scorer_key(spec)
+    if callable(spec):
+        return name, spec
+    if spec is None:
+        spec = "proxy"
+    return name, _SCORER_FACTORIES[spec]()
+
+
+def _ml_scorer_factory() -> Callable:
+    """Lazily train the Sec-3.5 ML cost model on a small synthetic corpus.
+
+    Heavy (fits one GBT pipeline per resource on first use); cached for the
+    process lifetime.  The training lock is held end-to-end so concurrent
+    planners share one model instead of each training their own.
+    """
+    with _ML_TRAIN_LOCK:
+        cached = _ml_scorer_factory.__dict__.get("_cached")
+        if cached is not None:
+            return cached
+        return _train_ml_scorer()
+
+
+def _train_ml_scorer() -> Callable:
+    import numpy as np
+
+    from .cost_model import MLScorer, ResourcePipeline
+    from .dataset import corpus_programs, synthetic_pnr
+    from .features import extract_features
+
+    opts = SolverOptions(max_solutions=8, n_budget=8, allow_duplication=False)
+    rows, labels = [], {"lut": [], "ff": [], "bram": []}
+    for _name, prog in corpus_programs(seed=0)[:6]:
+        up = unroll(prog)
+        for memname, mem in prog.memories.items():
+            groups = build_groups(up, memname)
+            for s in solve(mem, groups, up.iterators, opts)[:8]:
+                rows.append(extract_features(s, groups))
+                lab = synthetic_pnr(s)
+                for k in labels:
+                    labels[k].append(lab[k])
+    X = np.asarray(rows)
+    pipes = {
+        k: ResourcePipeline(gbt_params=dict(n_estimators=40)).fit(
+            X, np.asarray(v))
+        for k, v in labels.items()
+    }
+    scorer = MLScorer(pipes)
+    _ml_scorer_factory.__dict__["_cached"] = scorer
+    return scorer
+
+
+_ML_TRAIN_LOCK = threading.Lock()
+
+register_scorer("proxy", lambda: None)
+register_scorer("ml", _ml_scorer_factory)
+
+
+def rank_solutions(
+    sols: List[BankingSolution],
+    scorer: Optional[Callable[[BankingSolution], float]] = None,
+) -> List[BankingSolution]:
+    """Order candidate schemes best-first.
+
+    ``scorer`` is normally the ML cost model (core.cost_model.MLScorer);
+    without one we fall back to the weighted resource proxy -- this fallback
+    is exactly the 'first-order rules' behaviour the paper improves upon.
+    """
+    for s in sols:
+        if scorer is not None:
+            s.score = float(scorer(s))
+        elif s.resources is not None:
+            s.score = s.resources.total.weighted()
+    return sorted(sols, key=lambda s: s.score)
+
+
+# ---------------------------------------------------------------------------
+# Canonical program signatures
+# ---------------------------------------------------------------------------
+
+
+def _affine_payload(e: Affine) -> list:
+    return [list(map(list, e.terms)), list(map(list, e.syms)), e.const]
+
+
+def _groups_payload(groups: List[AccessGroup]) -> list:
+    return [
+        [
+            {
+                "exprs": [_affine_payload(e) for e in a.exprs],
+                "write": a.is_write,
+                "cycle": a.sched_cycle,
+            }
+            for a in g
+        ]
+        for g in groups
+    ]
+
+
+def _iterators_payload(groups: List[AccessGroup],
+                       iters: Dict[str, Iterator]) -> list:
+    used = set()
+    for g in groups:
+        for a in g:
+            for e in a.exprs:
+                used.update(e.iterator_names)
+    return [
+        [it.name, it.start, it.step, it.count]
+        for name in sorted(used)
+        if (it := iters.get(name)) is not None
+    ]
+
+
+def canonical_signature(mem: MemorySpec, groups: List[AccessGroup],
+                        iters: Dict[str, Iterator],
+                        opts: SolverOptions) -> str:
+    """Stable content hash of one banking problem.
+
+    Hashes exactly the inputs ``solve`` consumes -- the unrolled,
+    concurrency-grouped access polytopes, the memory spec (minus its name:
+    identity is structural), the iterator domains the accesses reference,
+    and the solver options -- so structurally identical programs collide by
+    construction.
+    """
+    payload = {
+        "v": SIGNATURE_VERSION,
+        "memory": [list(mem.dims), mem.word_bits, mem.ports],
+        "groups": _groups_payload(groups),
+        "iterators": _iterators_payload(groups, iters),
+        "opts": asdict(opts),
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"),
+                      default=list)
+    return "bp1-" + hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+def program_signature(program: Program, memory: str,
+                      opts: Optional[SolverOptions] = None) -> str:
+    """Convenience wrapper: signature of ``(program, memory)`` as posed."""
+    up = unroll(program)
+    groups = build_groups(up, memory)
+    return canonical_signature(program.memories[memory], groups,
+                               up.iterators, opts or SolverOptions())
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PlanRequest:
+    """One banking problem posed to the planner."""
+
+    program: Program
+    memory: str
+    opts: Optional[SolverOptions] = None
+    scorer: ScorerLike = None      # None -> planner default
+    use_cache: bool = True
+
+
+@dataclass
+class BankingPlan:
+    """A durable banking decision: chosen scheme + provenance.
+
+    ``solutions`` and ``groups`` are retained in-memory for fresh solves
+    (and memory-cache hits) but are not serialized; a plan loaded from disk
+    carries only the chosen scheme.
+    """
+
+    memory: str
+    signature: str
+    best: Optional[BankingSolution]
+    solve_seconds: float = 0.0
+    num_candidates: int = 0
+    scorer_name: str = "proxy"
+    status: str = "solved"   # solved | cached | cached-disk | timeout | error
+    created_at: float = 0.0
+    opts: SolverOptions = field(default_factory=SolverOptions)
+    solutions: List[BankingSolution] = field(default_factory=list)
+    groups: List[AccessGroup] = field(default_factory=list)
+    error: str = ""
+
+    # -- report compatibility ------------------------------------------------
+    def to_report(self):
+        """Legacy ``BankingReport`` view (deprecated shims, tables)."""
+        from .api import BankingReport
+
+        return BankingReport(
+            memory=self.memory,
+            groups=self.groups,
+            solutions=self.solutions or ([self.best] if self.best else []),
+            best=self.best,
+            solve_seconds=self.solve_seconds,
+            num_candidates=self.num_candidates,
+        )
+
+    def table_row(self) -> Dict[str, float]:
+        return self.to_report().table_row()
+
+    # -- serialization -------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "format": "banking-plan/v1",
+            "memory": self.memory,
+            "signature": self.signature,
+            "solve_seconds": self.solve_seconds,
+            "num_candidates": self.num_candidates,
+            "scorer_name": self.scorer_name,
+            "status": self.status,
+            "created_at": self.created_at,
+            "opts": asdict(self.opts),
+            "best": _solution_to_json(self.best) if self.best else None,
+            "error": self.error,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "BankingPlan":
+        if d.get("format") != "banking-plan/v1":
+            raise ValueError(f"not a banking plan: format={d.get('format')!r}")
+        opts_d = dict(d.get("opts") or {})
+        for k in ("b_candidates", "duplication_factors"):
+            if k in opts_d:
+                opts_d[k] = tuple(opts_d[k])
+        opts = SolverOptions(**opts_d)
+        best = _solution_from_json(d["best"], opts) if d.get("best") else None
+        return BankingPlan(
+            memory=d["memory"],
+            signature=d["signature"],
+            best=best,
+            solve_seconds=d.get("solve_seconds", 0.0),
+            num_candidates=d.get("num_candidates", 0),
+            scorer_name=d.get("scorer_name", "proxy"),
+            status=d.get("status", "solved"),
+            created_at=d.get("created_at", 0.0),
+            opts=opts,
+            error=d.get("error", ""),
+        )
+
+    def save(self, path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        tmp.write_text(json.dumps(self.to_json(), indent=1, sort_keys=True))
+        tmp.replace(path)
+        return path
+
+    @staticmethod
+    def load(path) -> "BankingPlan":
+        return BankingPlan.from_json(json.loads(Path(path).read_text()))
+
+
+# -- BankingSolution <-> JSON ------------------------------------------------
+
+
+def _solution_to_json(sol: BankingSolution) -> dict:
+    from .geometry import FlatGeometry, MultiDimGeometry  # noqa: F401
+
+    g = sol.geometry
+    if sol.kind == "flat":
+        geo = {"N": g.N, "B": g.B, "alpha": list(g.alpha), "P": list(g.P)}
+    else:
+        geo = {"Ns": list(g.Ns), "Bs": list(g.Bs), "alphas": list(g.alphas)}
+    res = None
+    if sol.resources is not None:
+        res = {
+            part: asdict(getattr(sol.resources, part))
+            for part in ("total", "crossbar", "resolution", "storage")
+        }
+    return {
+        "memory": {"name": sol.memory.name, "dims": list(sol.memory.dims),
+                   "word_bits": sol.memory.word_bits,
+                   "ports": sol.memory.ports},
+        "kind": sol.kind,
+        "geometry": geo,
+        "P": list(sol.P),
+        "pad": list(sol.pad),
+        "required_ports": sol.required_ports,
+        "num_banks": sol.num_banks,
+        "bank_volume": sol.bank_volume,
+        "fan_outs": list(sol.fan_outs),
+        "max_fan_in": sol.max_fan_in,
+        "duplicates": sol.duplicates,
+        "raw_ops": dict(sol.raw_ops),
+        "score": sol.score,
+        "note": sol.note,
+        "resources": res,
+    }
+
+
+def _solution_from_json(d: dict, opts: SolverOptions) -> BankingSolution:
+    """Rebuild a solution, including its Sec-3.4 resolution graphs, so the
+    loaded plan is directly usable by the banked-gather kernel."""
+    from .geometry import FlatGeometry, MultiDimGeometry
+
+    m = d["memory"]
+    mem = MemorySpec(m["name"], dims=tuple(m["dims"]),
+                     word_bits=m["word_bits"], ports=m["ports"])
+    level = opts.transform_level
+    P = tuple(d["P"])
+    if d["kind"] == "flat":
+        gd = d["geometry"]
+        geo = FlatGeometry(N=gd["N"], B=gd["B"], alpha=tuple(gd["alpha"]),
+                           P=P)
+        in_bits = _flat_in_bits(mem, geo.alpha)
+        ba, bo = build_flat_resolution(geo.N, geo.B, geo.alpha, P, mem.dims,
+                                       in_bits, level=level)
+        graphs = [ba]
+    else:
+        gd = d["geometry"]
+        geo = MultiDimGeometry(Ns=tuple(gd["Ns"]), Bs=tuple(gd["Bs"]),
+                               alphas=tuple(gd["alphas"]))
+        in_bits = max(_flat_in_bits(mem, geo.alphas), 8)
+        ba, bo = build_multidim_resolution(geo.Ns, geo.Bs, geo.alphas,
+                                           mem.dims, in_bits, level=level)
+        graphs = list(ba)
+    arith = Cost()
+    for node in graphs + [bo]:
+        arith = arith + graph_cost(node, in_bits)
+    raw = {"mul": 0, "div": 0, "mod": 0}
+    for node in graphs + [bo]:
+        r = count_raw_ops(node)
+        raw = {k: raw[k] + r[k] for k in raw}
+    resources = None
+    if d.get("resources"):
+        parts = {
+            part: ResourceEstimate(**d["resources"][part])
+            for part in ("total", "crossbar", "resolution", "storage")
+        }
+        resources = SchemeResources(**parts)
+    return BankingSolution(
+        memory=mem,
+        kind=d["kind"],
+        geometry=geo,
+        P=P,
+        pad=tuple(d["pad"]),
+        required_ports=d["required_ports"],
+        num_banks=d["num_banks"],
+        bank_volume=d["bank_volume"],
+        fan_outs=tuple(d["fan_outs"]),
+        max_fan_in=d["max_fan_in"],
+        duplicates=d.get("duplicates", 1),
+        resolution_ba=ba,
+        resolution_bo=bo,
+        arith_cost=arith,
+        raw_ops=raw,
+        resources=resources,
+        score=d.get("score", float("inf")),
+        note=d.get("note", ""),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The planner
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PlannerStats:
+    hits: int = 0
+    disk_hits: int = 0
+    misses: int = 0
+    solves: int = 0
+
+
+class BankingPlanner:
+    """Plan-oriented entry point: signature-keyed cache over the solver.
+
+    Parameters
+    ----------
+    opts : default ``SolverOptions`` for requests that don't carry their own
+    scorer : default scorer spec (registry name or callable)
+    cache_dir : optional directory of ``<signature>.json`` plans; solved
+        plans are persisted there and misses consult it before solving
+    max_workers : thread-pool width for ``plan_all``
+    """
+
+    def __init__(self, *, opts: Optional[SolverOptions] = None,
+                 scorer: ScorerLike = "proxy",
+                 cache_dir: Optional[Union[str, Path]] = None,
+                 max_workers: Optional[int] = None):
+        self.opts = opts or SolverOptions()
+        self.scorer = scorer
+        self.cache_dir = Path(cache_dir) if cache_dir is not None else None
+        self.max_workers = max_workers
+        self.stats = PlannerStats()
+        self._cache: Dict[str, BankingPlan] = {}
+        # strong refs to callable scorers keyed by their cache name: keeps
+        # the id() embedded in the key unique for the cache's lifetime
+        # (a GC'd lambda's address could otherwise be reused by a new one)
+        self._scorer_pins: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    # -- cache plumbing ------------------------------------------------------
+    def _cache_key(self, signature: str, scorer_name: str) -> str:
+        return f"{signature}/{scorer_name}"
+
+    @staticmethod
+    def _hit_copy(hit: BankingPlan, memory: str, status: str) -> BankingPlan:
+        """Cache-hit view: own lists (so caller mutations can't poison the
+        cache) relabeled for the requesting memory.  Signatures are
+        structural, so the underlying solutions may carry the name of the
+        memory that first posed this problem."""
+        out = copy.copy(hit)
+        out.status = status
+        out.memory = memory
+        out.solutions = list(hit.solutions)
+        out.groups = list(hit.groups)
+        return out
+
+    def _disk_path(self, signature: str, scorer_name: str) -> Optional[Path]:
+        if self.cache_dir is None:
+            return None
+        safe = scorer_name.replace(":", "_").replace("/", "_")
+        return self.cache_dir / f"{signature}.{safe}.json"
+
+    def warm_start(self, path: Union[str, Path]) -> int:
+        """Preload plans from a directory (or a single JSON file) into the
+        in-memory cache.  Returns the number of plans loaded."""
+        path = Path(path)
+        files = sorted(path.glob("*.json")) if path.is_dir() else [path]
+        n = 0
+        for f in files:
+            try:
+                plan = BankingPlan.load(f)
+            except (ValueError, KeyError, json.JSONDecodeError, OSError):
+                continue
+            with self._lock:
+                self._cache[self._cache_key(plan.signature,
+                                            plan.scorer_name)] = plan
+            n += 1
+        return n
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self._scorer_pins.clear()
+
+    # -- planning ------------------------------------------------------------
+    def signature(self, program: Program, memory: str,
+                  opts: Optional[SolverOptions] = None) -> str:
+        return program_signature(program, memory, opts or self.opts)
+
+    def plan(self, request: Union[PlanRequest, Program],
+             memory: Optional[str] = None, *,
+             opts: Optional[SolverOptions] = None,
+             scorer: ScorerLike = None,
+             use_cache: bool = True) -> BankingPlan:
+        """Plan one memory: cache hit or unroll->group->solve->rank."""
+        if isinstance(request, PlanRequest):
+            req = request
+        else:
+            if memory is None:
+                raise TypeError("plan(program, memory) requires a memory name")
+            req = PlanRequest(program=request, memory=memory, opts=opts,
+                              scorer=scorer, use_cache=use_cache)
+        opts = req.opts or self.opts
+        spec = req.scorer if req.scorer is not None else self.scorer
+        # key only; the factory (e.g. "ml" lazy training) runs on miss
+        scorer_name = scorer_key(spec)
+        if callable(spec):
+            with self._lock:
+                self._scorer_pins[scorer_name] = spec
+
+        up = unroll(req.program)
+        groups = build_groups(up, req.memory)
+        mem = req.program.memories[req.memory]
+        sig = canonical_signature(mem, groups, up.iterators, opts)
+        key = self._cache_key(sig, scorer_name)
+
+        if req.use_cache:
+            with self._lock:
+                hit = self._cache.get(key)
+            if hit is not None:
+                self.stats.hits += 1
+                return self._hit_copy(hit, req.memory, "cached")
+            disk = self._disk_path(sig, scorer_name)
+            if disk is not None and disk.exists():
+                try:
+                    plan = BankingPlan.load(disk)
+                except (ValueError, KeyError, TypeError,
+                        json.JSONDecodeError):
+                    pass  # damaged plan file: fall through and re-solve
+                else:
+                    with self._lock:
+                        self._cache[key] = plan
+                    self.stats.disk_hits += 1
+                    return self._hit_copy(plan, req.memory, "cached-disk")
+
+        self.stats.misses += 1
+        _, scorer_fn = resolve_scorer(spec)
+        t0 = time.perf_counter()
+        sols = solve(mem, groups, up.iterators, opts)
+        self.stats.solves += 1
+        ranked = rank_solutions(sols, scorer_fn)
+        dt = time.perf_counter() - t0
+        plan = BankingPlan(
+            memory=req.memory,
+            signature=sig,
+            best=ranked[0] if ranked else None,
+            solve_seconds=dt,
+            num_candidates=len(sols),
+            scorer_name=scorer_name,
+            status="solved",
+            created_at=time.time(),
+            opts=opts,
+            solutions=ranked,
+            groups=groups,
+        )
+        with self._lock:
+            self._cache[key] = plan
+        disk = self._disk_path(sig, scorer_name)
+        if disk is not None:
+            plan.save(disk)
+        return plan
+
+    def plan_all(self, program: Program, *,
+                 opts: Optional[SolverOptions] = None,
+                 scorer: ScorerLike = None,
+                 timeout: Optional[float] = None,
+                 max_workers: Optional[int] = None
+                 ) -> Dict[str, BankingPlan]:
+        """Plan every memory of ``program`` concurrently.
+
+        Each memory gets its own solver thread and its own ``timeout``
+        budget (measured from when its result is collected, so memories
+        queued behind a full pool are not charged for earlier solves); a
+        memory that exceeds it yields a plan with ``status='timeout'`` and
+        ``best=None`` (its solve keeps running in the background and will
+        populate the cache for the next request).
+        """
+        names = list(program.memories)
+        workers = max_workers or self.max_workers or min(8, max(1, len(names)))
+        out: Dict[str, BankingPlan] = {}
+        ex = ThreadPoolExecutor(max_workers=workers)
+        futs = {
+            name: ex.submit(self.plan, program, name,
+                            opts=opts, scorer=scorer)
+            for name in names
+        }
+        for name, fut in futs.items():
+            try:
+                out[name] = fut.result(timeout=timeout)
+            except FutureTimeoutError:
+                out[name] = BankingPlan(
+                    memory=name, signature="", best=None,
+                    status="timeout", created_at=time.time(),
+                    opts=opts or self.opts,
+                    error=f"exceeded {timeout}s budget")
+            except Exception as e:  # solver bug: report, don't kill batch
+                out[name] = BankingPlan(
+                    memory=name, signature="", best=None,
+                    status="error", created_at=time.time(),
+                    opts=opts or self.opts, error=repr(e))
+        # wait=False: a timed-out solve finishes in the background and
+        # populates the cache for the next request instead of blocking here
+        ex.shutdown(wait=False)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default planner (shims, serving, sharding)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_PLANNER: Optional[BankingPlanner] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_planner() -> BankingPlanner:
+    """The shared in-memory-cached planner used by the deprecated free
+    functions, the serving hot path, and the sharding bridge."""
+    global _DEFAULT_PLANNER
+    with _DEFAULT_LOCK:
+        if _DEFAULT_PLANNER is None:
+            _DEFAULT_PLANNER = BankingPlanner()
+        return _DEFAULT_PLANNER
+
+
+__all__ = [
+    "BankingPlan",
+    "BankingPlanner",
+    "PlanRequest",
+    "PlannerStats",
+    "canonical_signature",
+    "default_planner",
+    "program_signature",
+    "rank_solutions",
+    "register_scorer",
+    "registered_scorers",
+    "resolve_scorer",
+]

@@ -1,0 +1,17 @@
+"""Pallas API compatibility shims.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across JAX releases; resolve whichever this JAX ships.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPU_COMPILER_PARAMS = getattr(
+    pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params struct under either JAX spelling."""
+    return TPU_COMPILER_PARAMS(**kwargs)

@@ -11,9 +11,11 @@ no collective on the access path).  Dims that cannot bank conflict-free
 (e.g. 8 kv heads across a 16-way axis) fall back to the next candidate dim
 -- precisely the paper's 'many valid geometries, pick the cheap one'.
 
-The result is memoized per (role, dims, axis size); the same BankingSolution
-objects drive the Pallas banked-gather kernel, so device-level and
-kernel-level banking share one solver.
+The result is memoized per (role, dims, axis size) and the underlying
+banking problems go through the shared ``BankingPlanner``, whose canonical
+program signatures dedup structurally identical problems across roles; the
+same BankingSolution objects drive the Pallas banked-gather kernel, so
+device-level and kernel-level banking share one solver.
 """
 
 from __future__ import annotations
@@ -27,8 +29,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
+from ..core.planner import default_planner
 from ..core.polytope import Affine, MemorySpec
-from ..core.api import partition_memory
 from ..core.solver import SolverOptions
 
 
@@ -58,8 +60,8 @@ def bankable(dim_size: int, lanes: int) -> bool:
     opts = SolverOptions(max_solutions=4, n_budget=8,
                          b_candidates=(blk, 1) if blk > 1 else (1,),
                          allow_multidim=False, allow_duplication=False)
-    rep = partition_memory(prog, "t", opts)
-    for s in rep.solutions:
+    plan = default_planner().plan(prog, "t", opts=opts)
+    for s in plan.solutions:
         if (s.kind == "flat" and s.num_banks % lanes == 0
                 and max(s.fan_outs) == 1):
             return True

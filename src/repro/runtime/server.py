@@ -26,8 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.api import partition_memory
 from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
+from ..core.planner import default_planner
 from ..core.polytope import Affine, MemorySpec
 from ..models import Model
 from ..launch import steps as steps_mod
@@ -46,7 +46,12 @@ def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
                   readers: int = 8):
     """Banking scheme for the KV pool: pages = banks, page size = B.
 
-    ``readers`` concurrent decode lanes must never contend on a page."""
+    ``readers`` concurrent decode lanes must never contend on a page.
+
+    Every decode tick poses the structurally identical KV-pool problem, so
+    this goes through the shared planner: the first call solves, every
+    later call is a signature-keyed cache hit (zero solver work on the
+    serving hot path)."""
     npages = max_len // page
     mem = MemorySpec("kv_pool", dims=(max_len,), word_bits=16, ports=1)
     prog = Program(
@@ -57,10 +62,10 @@ def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
         memories={"kv_pool": mem},
     )
     from ..core.solver import SolverOptions
-    rep = partition_memory(prog, "kv_pool",
-                           SolverOptions(b_candidates=(page, 1),
-                                         allow_multidim=False))
-    return rep.best
+    plan = default_planner().plan(
+        prog, "kv_pool",
+        opts=SolverOptions(b_candidates=(page, 1), allow_multidim=False))
+    return plan.best
 
 
 class Server:

@@ -4,13 +4,17 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (AccessDecl, Counter, Ctrl, MemorySpec, Program,
-                        Sched, SolverOptions, build_groups, partition_memory,
-                        unroll)
+from repro.core import (AccessDecl, BankingPlanner, Counter, Ctrl,
+                        MemorySpec, Program, Sched, SolverOptions,
+                        build_groups, unroll)
 from repro.core.polytope import Affine
 from repro.core import problems
+
+
+def _plan(prog, memory):
+    """Fresh planner per problem: these tests exercise the solve path."""
+    return BankingPlanner().plan(prog, memory)
 
 
 def _simulate_conflicts(sol, accesses, iters, n_samples=60, seed=0):
@@ -58,7 +62,7 @@ def _dup_split(sol, groups):
 def test_best_scheme_is_conflict_free(name):
     prog = problems.build(name)
     memname = list(prog.memories)[0]
-    rep = partition_memory(prog, memname)
+    rep = _plan(prog, memname)
     assert rep.best is not None, name
     up = unroll(prog)
     groups = build_groups(up, memname)
@@ -94,7 +98,7 @@ def test_figure3_solutions():
                  accesses=[AccessDecl("arr", (Affine.of(const=1, k=1),)),
                            AccessDecl("arr", (Affine.of(const=2, k=1),))])
     prog = Program(root=inner, memories={"arr": mem})
-    rep = partition_memory(prog, "arr")
+    rep = _plan(prog, "arr")
     kinds = {(s.geometry.N, s.geometry.B) for s in rep.solutions
              if s.kind == "flat"}
     assert (6, 1) in kinds  # paper's Option 3
@@ -115,8 +119,8 @@ def test_ports_relax_validity():
                                AccessDecl("m", (Affine.of(i=2, const=1),))])
         return Program(root=inner, memories={"m": mem})
 
-    r1 = partition_memory(build(1), "m")
-    r2 = partition_memory(build(2), "m")
+    r1 = _plan(build(1), "m")
+    r2 = _plan(build(2), "m")
     assert min(s.num_banks for s in r2.solutions) <= \
         min(s.num_banks for s in r1.solutions)
 
@@ -124,7 +128,7 @@ def test_ports_relax_validity():
 def test_spmv_multidim_regrouping():
     """Paper Sec 4: spmv's random row offsets disappear under projection."""
     prog = problems.spmv_program()
-    rep = partition_memory(prog, "mat")
+    rep = _plan(prog, "mat")
     assert any(s.kind == "multidim" for s in rep.solutions)
     best_md = min((s for s in rep.solutions if s.kind == "multidim"),
                   key=lambda s: s.score)
@@ -134,13 +138,13 @@ def test_spmv_multidim_regrouping():
 
 def test_duplication_offered_for_heavy_readers():
     prog = problems.sgd_program(par_a=4, par_b=3)
-    rep = partition_memory(prog, "data")
+    rep = _plan(prog, "data")
     assert any(s.duplicates > 1 for s in rep.solutions)
 
 
 def test_solver_all_solutions_dsp_free_with_full_transforms():
     prog = problems.build("sobel")
-    rep = partition_memory(prog, "img")
+    rep = _plan(prog, "img")
     best = rep.best
     assert best.resources.total.dsp == 0
 

@@ -87,6 +87,7 @@ def test_pipeline_matches_sequential():
     """)
 
 
+@pytest.mark.slow
 def test_mini_dryrun_multipod():
     """End-to-end dry-run on a (2,2,2) mini multi-pod mesh (subprocess)."""
     out = _run_subprocess("""

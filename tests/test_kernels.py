@@ -16,6 +16,7 @@ def _rand(shape, dtype):
     return jnp.asarray(x, dtype)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,Sq,Sk,H,Hkv,Dh", [
     (1, 128, 128, 2, 2, 64),
@@ -41,6 +42,7 @@ def test_flash_attention_sweep(B, Sq, Sk, H, Hkv, Dh, dtype, causal, window):
                                np.asarray(want, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,H,Q,P,N", [
     (1, 2, 32, 16, 8),
     (2, 4, 64, 32, 16),
@@ -99,8 +101,8 @@ def test_moe_dispatch_sweep(T, D, EC, dtype):
 
 @pytest.mark.parametrize("A,par,ports", [(64, 8, 1), (60, 4, 2), (48, 6, 1)])
 def test_banked_gather_sweep(A, par, ports):
-    from repro.core import (AccessDecl, Counter, Ctrl, MemorySpec, Program,
-                            Sched, partition_memory)
+    from repro.core import (AccessDecl, BankingPlanner, Counter, Ctrl,
+                            MemorySpec, Program, Sched)
     from repro.core.polytope import Affine
 
     mem = MemorySpec("t", dims=(A,), word_bits=32, ports=ports)
@@ -108,7 +110,7 @@ def test_banked_gather_sweep(A, par, ports):
                  counters=[Counter("i", 0, 1, A // par, par=par)],
                  accesses=[AccessDecl("t", (Affine.of(i=1),))])
     prog = Program(root=inner, memories={"t": mem})
-    sol = partition_memory(prog, "t").best
+    sol = BankingPlanner().plan(prog, "t").best
     D = 8
     flat = _rand((A, D), jnp.float32)
     table = ops.pack_banked(flat, sol)
@@ -118,6 +120,7 @@ def test_banked_gather_sweep(A, par, ports):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.slow
 def test_moe_sorted_vs_dense_oracle():
     """sorted dispatch == dense oracle when capacity is unconstrained."""
     import dataclasses

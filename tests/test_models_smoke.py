@@ -22,6 +22,7 @@ def _batch(cfg, B=2, S=32):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_train_step(arch):
     cfg = get_arch(arch).reduced()
@@ -35,6 +36,7 @@ def test_smoke_train_step(arch):
     assert np.isfinite(gn) and gn > 0, arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_prefill_decode(arch):
     cfg = get_arch(arch).reduced()

@@ -23,6 +23,7 @@ def _gemma_like() -> ArchConfig:
     )
 
 
+@pytest.mark.slow
 def test_grouped_ring_decode_matches_dense_decode():
     """Ring-banked local caches must be bit-compatible with the full-buffer
     decode (window masking == ring retention), including past wrap-around."""
@@ -63,6 +64,7 @@ def test_moe_a2a_fallback_without_mesh():
     np.testing.assert_allclose(np.asarray(ys), np.asarray(ya), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_a2a_matches_oracle_on_mesh():
     """4-device subprocess: shard_map dispatch == dense oracle."""
     env = dict(os.environ)

@@ -1,0 +1,273 @@
+"""Planner subsystem: signature cache, JSON durability, scorer registry."""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (AccessDecl, BankingPlan, BankingPlanner, Counter,
+                        Ctrl, MemorySpec, PlanRequest, Program, Sched,
+                        SolverOptions, partition_memory, program_signature,
+                        register_scorer, resolve_scorer)
+from repro.core import planner as planner_mod
+from repro.core.polytope import Affine
+
+
+def _reader_program(stride=1, count=32, par=8, dims=(256,), name="table"):
+    mem = MemorySpec(name, dims=dims, word_bits=32, ports=1)
+    return Program(
+        root=Ctrl("reader", Sched.INNER,
+                  counters=[Counter("i", 0, 1, count, par=par)],
+                  accesses=[AccessDecl(name, (Affine.of(i=stride),))]),
+        memories={name: mem},
+    )
+
+
+@pytest.fixture
+def solve_counter(monkeypatch):
+    """Count real solver invocations made through the planner."""
+    calls = []
+    real = planner_mod.solve
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(planner_mod, "solve", counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# Cache semantics
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_performs_zero_solver_calls(solve_counter):
+    planner = BankingPlanner()
+    p1 = planner.plan(_reader_program(), "table")
+    assert len(solve_counter) == 1 and p1.status == "solved"
+    # a structurally identical but freshly-built program -> pure cache hit
+    p2 = planner.plan(_reader_program(), "table")
+    assert len(solve_counter) == 1          # ZERO additional solver calls
+    assert p2.status == "cached"
+    assert p2.best.geometry == p1.best.geometry
+    assert planner.stats.hits == 1 and planner.stats.solves == 1
+
+
+def test_mutated_access_re_solves(solve_counter):
+    planner = BankingPlanner()
+    planner.plan(_reader_program(stride=1), "table")
+    planner.plan(_reader_program(stride=2), "table")   # different polytopes
+    assert len(solve_counter) == 2
+    assert planner.stats.misses == 2 and planner.stats.hits == 0
+
+
+def test_signature_is_structural_not_nominal():
+    """Same polytopes under a different memory name -> same signature."""
+    a = program_signature(_reader_program(name="kv_pool"), "kv_pool")
+    b = program_signature(_reader_program(name="table"), "table")
+    assert a == b
+    # ...but solver options are part of the identity
+    c = program_signature(_reader_program(name="table"), "table",
+                          SolverOptions(n_budget=7))
+    assert c != b
+
+
+def test_opts_and_scorer_key_the_cache(solve_counter):
+    planner = BankingPlanner()
+    prog = _reader_program()
+    planner.plan(prog, "table", opts=SolverOptions(n_budget=8))
+    planner.plan(prog, "table", opts=SolverOptions(n_budget=16))
+    assert len(solve_counter) == 2
+    # same opts, different scorer -> re-rank requires a fresh solve entry
+    planner.plan(prog, "table", opts=SolverOptions(n_budget=8),
+                 scorer=lambda s: float(s.num_banks))
+    assert len(solve_counter) == 3
+
+
+def test_plan_request_object_entry_point(solve_counter):
+    planner = BankingPlanner()
+    req = PlanRequest(program=_reader_program(), memory="table")
+    plan = planner.plan(req)
+    assert plan.best is not None and len(solve_counter) == 1
+
+
+# ---------------------------------------------------------------------------
+# Durability: JSON round-trip + disk cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_json_roundtrip_preserves_scheme():
+    planner = BankingPlanner()
+    plan = planner.plan(_reader_program(), "table")
+    blob = json.dumps(plan.to_json())            # proves JSON-serializable
+    back = BankingPlan.from_json(json.loads(blob))
+    assert back.signature == plan.signature
+    assert back.scorer_name == plan.scorer_name
+    assert back.num_candidates == plan.num_candidates
+    assert back.solve_seconds == plan.solve_seconds
+    b0, b1 = plan.best, back.best
+    assert b1.kind == b0.kind and b1.geometry == b0.geometry
+    assert (b1.num_banks, b1.bank_volume, b1.P, b1.pad) == \
+        (b0.num_banks, b0.bank_volume, b0.P, b0.pad)
+    assert b1.fan_outs == b0.fan_outs and b1.score == b0.score
+    assert b1.resources.total.lut == pytest.approx(b0.resources.total.lut)
+    # the rebuilt resolution graphs drive the banked-gather kernel
+    from repro.kernels import ops, ref
+    import jax.numpy as jnp
+    flat = jnp.asarray(np.random.default_rng(0).normal(size=(256, 4)),
+                       jnp.float32)
+    table = ops.pack_banked(flat, b1)
+    idx = jnp.asarray([0, 5, 200, 131], jnp.int32)
+    got = ops.gather_banked(table, idx, b1)
+    assert (np.asarray(got) == np.asarray(
+        ref.banked_gather_reference(flat, idx))).all()
+
+
+def test_disk_cache_warm_start(tmp_path, solve_counter):
+    cold = BankingPlanner(cache_dir=tmp_path)
+    plan = cold.plan(_reader_program(), "table")
+    assert len(list(tmp_path.glob("*.json"))) == 1
+    # a new planner process warm-starts from the persisted plan
+    warm = BankingPlanner(cache_dir=tmp_path)
+    hit = warm.plan(_reader_program(), "table")
+    assert hit.status == "cached-disk"
+    assert hit.best.geometry == plan.best.geometry
+    assert len(solve_counter) == 1           # only the cold planner solved
+    # explicit warm_start() preloads into the in-memory cache
+    fresh = BankingPlanner()
+    assert fresh.warm_start(tmp_path) == 1
+    assert fresh.plan(_reader_program(), "table").status == "cached"
+    assert len(solve_counter) == 1
+
+
+def test_corrupt_disk_plan_falls_back_to_solve(tmp_path, solve_counter):
+    BankingPlanner(cache_dir=tmp_path).plan(_reader_program(), "table")
+    for f in tmp_path.glob("*.json"):
+        f.write_text("{not json")
+    repaired = BankingPlanner(cache_dir=tmp_path)
+    plan = repaired.plan(_reader_program(), "table")
+    assert plan.status == "solved" and len(solve_counter) == 2
+    # the re-solve rewrote the damaged file
+    assert BankingPlanner(cache_dir=tmp_path).plan(
+        _reader_program(), "table").status == "cached-disk"
+
+
+# ---------------------------------------------------------------------------
+# Scorer registry
+# ---------------------------------------------------------------------------
+
+
+def test_scorer_registry_resolution():
+    name, fn = resolve_scorer("proxy")
+    assert name == "proxy" and fn is None
+    name, fn = resolve_scorer(None)
+    assert name == "proxy"
+
+    def my_scorer(sol):
+        return float(sol.num_banks)
+
+    name, fn = resolve_scorer(my_scorer)
+    assert name.startswith("custom:my_scorer:") and fn is my_scorer
+
+    register_scorer("banks", lambda: my_scorer)
+    name, fn = resolve_scorer("banks")
+    assert name == "banks" and fn is my_scorer
+
+
+def test_distinct_callable_scorers_do_not_alias(solve_counter):
+    """Two different lambdas share __name__; identity must key the cache."""
+    planner = BankingPlanner()
+    p1 = planner.plan(_reader_program(), "table",
+                      scorer=lambda s: float(s.num_banks))
+    p2 = planner.plan(_reader_program(), "table",
+                      scorer=lambda s: -float(s.num_banks))
+    assert len(solve_counter) == 2
+    assert [s.num_banks for s in p1.solutions] == \
+        sorted(s.num_banks for s in p1.solutions)
+    assert [s.num_banks for s in p2.solutions] == \
+        sorted((s.num_banks for s in p2.solutions), reverse=True)
+
+
+def test_cache_hit_is_isolated_and_relabeled(solve_counter):
+    planner = BankingPlanner()
+    planner.plan(_reader_program(name="kv_pool"), "kv_pool")
+    hit = planner.plan(_reader_program(name="table"), "table")
+    assert hit.status == "cached" and len(solve_counter) == 1
+    assert hit.memory == "table"        # relabeled for the requester
+    hit.solutions.clear()               # caller mutation must not poison
+    again = planner.plan(_reader_program(name="table"), "table")
+    assert again.solutions and len(solve_counter) == 1
+
+
+def test_unknown_scorer_name_raises():
+    with pytest.raises(ValueError, match="unknown scorer 'nope'"):
+        resolve_scorer("nope")
+    with pytest.raises(ValueError, match="proxy"):
+        BankingPlanner().plan(_reader_program(), "table", scorer="nope")
+
+
+def test_registered_scorer_drives_ranking():
+    register_scorer("neg_banks", lambda: (lambda s: -float(s.num_banks)))
+    plan = BankingPlanner(scorer="neg_banks").plan(_reader_program(), "table")
+    assert plan.scorer_name == "neg_banks"
+    banks = [s.num_banks for s in plan.solutions]
+    assert banks == sorted(banks, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Batched planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_all_covers_every_memory():
+    mem_a = MemorySpec("a", dims=(64,), ports=1)
+    mem_b = MemorySpec("b", dims=(32, 32), ports=1)
+    prog = Program(
+        root=Ctrl("root", Sched.SEQUENTIAL, children=[
+            Ctrl("ra", Sched.INNER,
+                 counters=[Counter("i", 0, 1, 16, par=4)],
+                 accesses=[AccessDecl("a", (Affine.of(i=1),))]),
+            Ctrl("rb", Sched.INNER,
+                 counters=[Counter("r", 0, 1, 16, par=2),
+                           Counter("c", 0, 1, 16)],
+                 accesses=[AccessDecl("b", (Affine.of(r=1), Affine.of(c=1)))]),
+        ]),
+        memories={"a": mem_a, "b": mem_b},
+    )
+    plans = BankingPlanner().plan_all(prog)
+    assert set(plans) == {"a", "b"}
+    assert all(p.status == "solved" and p.best is not None
+               for p in plans.values())
+
+
+def test_plan_all_timeout_yields_timeout_plan(monkeypatch):
+    import time as time_mod
+
+    real = planner_mod.solve
+
+    def slow_solve(*a, **kw):
+        time_mod.sleep(1.5)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(planner_mod, "solve", slow_solve)
+    plans = BankingPlanner().plan_all(_reader_program(), timeout=0.05)
+    assert plans["table"].status == "timeout"
+    assert plans["table"].best is None
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims
+# ---------------------------------------------------------------------------
+
+
+def test_free_function_shim_warns_and_matches_planner():
+    prog = _reader_program(stride=3, count=16, par=4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rep = partition_memory(prog, "table")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    plan = BankingPlanner().plan(prog, "table")
+    assert rep.best.geometry == plan.best.geometry
+    assert rep.table_row()["banks"] == plan.table_row()["banks"]

@@ -3,6 +3,10 @@
 import itertools
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.polytope import (Affine, Iterator, delta_can_hit_window,

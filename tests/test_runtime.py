@@ -77,6 +77,7 @@ def test_ckpt_elastic_reshard(tmp_path):
     assert restored["w"].sharding == shardings["w"]
 
 
+@pytest.mark.slow
 def test_train_restart_bitwise_identical(tmp_path):
     """Kill at step 17, restart, final state == uninterrupted run."""
     cfg = _tiny()
