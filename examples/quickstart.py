@@ -1,6 +1,18 @@
-"""Quickstart: plan a memory partitioning with the BankingPlanner (the
-front door of the banking system), inspect the chosen scheme, round-trip
-the plan through JSON, and run the banked-gather Pallas kernel against it.
+"""Quickstart: the plan -> compile -> execute flow of the banking system.
+
+1. **Plan**: ``BankingPlanner.plan`` poses the banking problem and returns
+   a durable ``BankingPlan`` keyed by a canonical program signature
+   (structurally identical programs hit the cache, never re-solve).
+2. **Compile**: ``plan.compile()`` lowers the chosen scheme ONCE into a
+   ``CompiledBankingPlan`` -- the executable artifact owning the physical
+   layout, the jit-ready BA/BO resolution callables, pack/unpack, the
+   Pallas banked-gather binding, and the PartitionSpec bridge.  Artifacts
+   are cached on the planner by (plan signature, backend) and serialize
+   to JSON next to the plan cache.
+3. **Execute**: everything outside ``repro.core`` talks to the artifact;
+   direct access to ``BankingSolution`` fields (``.geometry``,
+   ``.resolution_ba``/``_bo``) from kernels/runtime/parallel code is
+   deprecated and gone.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -13,10 +25,10 @@ import json
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AccessDecl, BankingPlan, BankingPlanner, Counter,
-                        Ctrl, MemorySpec, Program, Sched)
+from repro.core import (AccessDecl, BankingPlanner, CompiledBankingPlan,
+                        Counter, Ctrl, MemorySpec, Program, Sched)
 from repro.core.polytope import Affine
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def main():
@@ -46,26 +58,32 @@ def main():
     print(f"replanning the same program: status={again.status} "
           f"(stats: {planner.stats})")
 
-    # Plans are durable artifacts: JSON round-trip preserves the scheme and
-    # rebuilds the resolution graphs, so a loaded plan drives the kernel.
-    best = BankingPlan.from_json(json.loads(json.dumps(plan.to_json()))).best
+    # COMPILE: lower the chosen scheme once.  The artifact owns the layout
+    # and the Eq. 1-2 + Sec-3.4 resolution circuit; recompiling is a cache
+    # hit on the planner, and artifacts JSON-round-trip so a warm-started
+    # planner skips re-lowering too.
+    art = plan.compile()
+    print("compiled:", art.describe())
+    art = CompiledBankingPlan.from_json(json.loads(json.dumps(art.to_json())))
 
-    # Pack data bank-major per the scheme and gather through the kernel --
-    # the bank-resolution arithmetic (Eq. 1-2 + Sec 3.4 rewrites) runs in
-    # the BlockSpec index_map.
+    # EXECUTE: pack data bank-major per the artifact's layout and gather
+    # through the Pallas kernel -- the compiled bank-resolution arithmetic
+    # runs in the BlockSpec index_map.
     D = 16
     flat = jnp.asarray(np.random.default_rng(0).normal(size=(256, D)),
                        jnp.float32)
-    table = ops.pack_banked(flat, best)
+    table = art.pack(flat)
+    print(f"bank-major table shape: {art.layout.table_shape(D)}")
     idx = jnp.asarray([0, 7, 63, 101, 255, 128, 33, 200], jnp.int32)
-    got = ops.gather_banked(table, idx, best)
+    got = art.gather(table, idx)
     want = ref.banked_gather_reference(flat, idx)
     assert (np.asarray(got) == np.asarray(want)).all()
-    print(f"banked_gather over {best.num_banks} banks "
-          f"(from the JSON-round-tripped plan): exact ✓")
-    raw = best.raw_ops
+    assert (np.asarray(art.unpack(table)) == np.asarray(flat)).all()
+    print(f"banked_gather over {art.n_banks} banks "
+          f"(from the JSON-round-tripped artifact): exact ✓")
+    raw = plan.best.raw_ops
     print(f"raw mul/div/mod left in resolution arithmetic: {raw} "
-          f"(DSP-free: {best.dsp_free})")
+          f"(DSP-free: {plan.best.dsp_free})")
 
 
 if __name__ == "__main__":

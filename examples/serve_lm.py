@@ -13,10 +13,15 @@ from repro.runtime.server import Request, Server, page_solution
 def main():
     cfg = get_arch("qwen2_7b").reduced()
     model = get_model(cfg)
-    server = Server(model, max_batch=4, max_len=64)
 
-    sol = page_solution(cfg, max_len=64, page=16, readers=4)
-    print("KV pool banking scheme (pages = banks):", sol.describe())
+    # compiled KV-pool banking artifact: the pager reads page count / page
+    # size off its physical layout (pages = banks, size = bank volume)
+    art = page_solution(cfg, max_len=64, page=16, readers=4)
+    print("KV pool banking scheme (pages = banks):", art.describe())
+    server = Server(model, max_batch=4, max_len=64, kv_plan=art)
+    print(f"page pool: {server.pager.slots} slots x "
+          f"{server.pager.pages_per_slot} pages x "
+          f"{server.pager.page_size} tokens")
 
     rng = np.random.default_rng(0)
     for uid in range(6):  # more requests than slots -> continuous batching

@@ -1,11 +1,25 @@
 """Core banking system: the paper's contribution as a composable library.
 
 The front door is the planner subsystem (``BankingPlanner`` /
-``BankingPlan`` / ``PlanRequest``); the free functions ``partition_memory``
-and ``partition_all`` are deprecated shims kept for compatibility.
+``BankingPlan`` / ``PlanRequest``).  Plans *execute* through compiled
+artifacts: ``plan.compile()`` lowers the chosen scheme once into a
+``CompiledBankingPlan`` owning the physical layout, the jit-ready BA/BO
+resolution callables, pack/unpack, the Pallas gather binding, and the
+PartitionSpec bridge -- every consumer outside ``core/`` goes through it.
+The free functions ``partition_memory`` / ``partition_all`` are deprecated
+shims kept for compatibility.
 """
 
 from .api import BankingReport, partition_all, partition_memory
+from .artifact import (
+    BankingLayout,
+    CompiledBankingPlan,
+    as_compiled,
+    compile_geometry,
+    compile_plan,
+    compile_solution,
+    lane_compile,
+)
 from .controller import AccessDecl, Counter, Ctrl, Program, Sched, Unroll, unroll
 from .geometry import FlatGeometry, MultiDimGeometry
 from .grouping import build_groups
@@ -20,17 +34,20 @@ from .planner import (
     register_scorer,
     registered_scorers,
     resolve_scorer,
+    set_ml_scorer_path,
 )
 from .polytope import Access, AccessGroup, Affine, Iterator, MemorySpec
 from .solver import BankingSolution, SolverOptions, solve
 
 __all__ = [
-    "Access", "AccessDecl", "AccessGroup", "Affine", "BankingPlan",
-    "BankingPlanner", "BankingReport", "BankingSolution", "Counter", "Ctrl",
-    "FlatGeometry", "Iterator", "MemorySpec", "MultiDimGeometry",
-    "PlanRequest", "Program", "Sched", "SolverOptions", "Unroll",
-    "build_groups", "canonical_signature", "default_planner",
-    "partition_all", "partition_memory", "program_signature",
-    "rank_solutions", "register_scorer", "registered_scorers",
-    "resolve_scorer", "solve", "unroll",
+    "Access", "AccessDecl", "AccessGroup", "Affine", "BankingLayout",
+    "BankingPlan", "BankingPlanner", "BankingReport", "BankingSolution",
+    "CompiledBankingPlan", "Counter", "Ctrl", "FlatGeometry", "Iterator",
+    "MemorySpec", "MultiDimGeometry", "PlanRequest", "Program", "Sched",
+    "SolverOptions", "Unroll", "as_compiled", "build_groups",
+    "canonical_signature", "compile_geometry", "compile_plan",
+    "compile_solution", "default_planner", "lane_compile", "partition_all",
+    "partition_memory", "program_signature", "rank_solutions",
+    "register_scorer", "registered_scorers", "resolve_scorer",
+    "set_ml_scorer_path", "solve", "unroll",
 ]

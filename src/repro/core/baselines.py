@@ -22,9 +22,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from .api import BankingReport
 from .controller import Program, unroll
-from .planner import BankingPlanner
+from .planner import BankingPlan, BankingPlanner
 from .geometry import ConflictCache, FlatGeometry, MultiDimGeometry, \
     flat_conflict_edges, multidim_conflict_edges, _max_conflict_clique
 from .grouping import build_groups
@@ -41,14 +40,25 @@ from .solver import (
 import time
 
 
-def run_ours(program: Program, memory: str,
-             scorer=None) -> BankingReport:
+def _as_plan(memory: str, groups, sols, dt: float, opts: SolverOptions,
+             system: str) -> BankingPlan:
+    """Wrap a comparison system's schemes as a (detached) BankingPlan so
+    every system yields the same artifact type; ``plan.compile()`` lowers
+    the emulated system's choice exactly like ours."""
+    return BankingPlan(
+        memory=memory, signature="", best=sols[0] if sols else None,
+        solve_seconds=dt, num_candidates=len(sols), scorer_name=system,
+        status="solved", created_at=time.time(), opts=opts,
+        solutions=list(sols), groups=list(groups))
+
+
+def run_ours(program: Program, memory: str, scorer=None) -> BankingPlan:
     opts = SolverOptions(transform_level="full")
     planner = BankingPlanner(opts=opts)
-    return planner.plan(program, memory, scorer=scorer).to_report()
+    return planner.plan(program, memory, scorer=scorer)
 
 
-def run_baseline_wang14(program: Program, memory: str) -> BankingReport:
+def run_baseline_wang14(program: Program, memory: str) -> BankingPlan:
     """Flat-only, raw arithmetic, first-order (min-N then min-FO) selection."""
     t0 = time.perf_counter()
     up = unroll(program)
@@ -66,11 +76,10 @@ def run_baseline_wang14(program: Program, memory: str) -> BankingReport:
     for s in sols:
         s.score = s.num_banks
     dt = time.perf_counter() - t0
-    return BankingReport(memory, groups, sols, sols[0] if sols else None,
-                         dt, len(sols))
+    return _as_plan(memory, groups, sols, dt, opts, "baseline")
 
 
-def run_spatial_firstvalid(program: Program, memory: str) -> BankingReport:
+def run_spatial_firstvalid(program: Program, memory: str) -> BankingPlan:
     """Unmodified Spatial: FIRST valid flat scheme in naive order."""
     t0 = time.perf_counter()
     up = unroll(program)
@@ -106,10 +115,10 @@ def run_spatial_firstvalid(program: Program, memory: str) -> BankingReport:
             break
     dt = time.perf_counter() - t0
     sols = [found] if found else []
-    return BankingReport(memory, groups, sols, found, dt, len(sols))
+    return _as_plan(memory, groups, sols, dt, naive_opts, "spatial")
 
 
-def run_merlin_emulation(program: Program, memory: str) -> BankingReport:
+def run_merlin_emulation(program: Program, memory: str) -> BankingPlan:
     """Bounding-box stencil template with raw arithmetic (see module doc)."""
     t0 = time.perf_counter()
     up = unroll(program)
@@ -146,7 +155,7 @@ def run_merlin_emulation(program: Program, memory: str) -> BankingReport:
         # fall back to whatever first-valid finds
         return run_spatial_firstvalid(program, memory)
     dt = time.perf_counter() - t0
-    return BankingReport(memory, groups, [found], found, dt, 1)
+    return _as_plan(memory, groups, [found], dt, naive_opts, "merlin")
 
 
 SYSTEMS = {

@@ -37,6 +37,20 @@ class _TreeNode:
     def is_leaf(self) -> bool:
         return self.left is None
 
+    def to_json(self) -> dict:
+        if self.is_leaf:
+            return {"v": self.value}
+        return {"f": self.feature, "t": self.threshold,
+                "l": self.left.to_json(), "r": self.right.to_json()}
+
+    @staticmethod
+    def from_json(d: dict) -> "_TreeNode":
+        if "f" not in d:
+            return _TreeNode(value=d["v"])
+        return _TreeNode(feature=d["f"], threshold=d["t"],
+                         left=_TreeNode.from_json(d["l"]),
+                         right=_TreeNode.from_json(d["r"]))
+
 
 def _fit_tree(X, y, depth, min_leaf, rng, n_thresholds=16, feature_frac=0.8):
     node = _TreeNode(value=float(y.mean()))
@@ -133,6 +147,24 @@ class GradientBoostedTrees:
             _tree_importance(t, imp)
         return imp
 
+    def to_json(self) -> dict:
+        return {
+            "params": dict(n_estimators=self.n_estimators,
+                           max_depth=self.max_depth,
+                           learning_rate=self.learning_rate,
+                           subsample=self.subsample,
+                           min_leaf=self.min_leaf, seed=self.seed),
+            "base": self.base,
+            "trees": [t.to_json() for t in self.trees],
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "GradientBoostedTrees":
+        gbt = GradientBoostedTrees(**d["params"])
+        gbt.base = d["base"]
+        gbt.trees = [_TreeNode.from_json(t) for t in d["trees"]]
+        return gbt
+
 
 # ---------------------------------------------------------------------------
 # The paper's full pipeline: poly2 -> GBT -> top-36 reselect -> refit
@@ -174,6 +206,30 @@ class ResourcePipeline:
         Xs = (Xp - self.mu) / self.sd
         p = self.model.predict(Xs[:, self.selected])
         return np.expm1(p) if self.log_target else p
+
+    def to_json(self) -> dict:
+        return {
+            "n_selected": self.n_selected,
+            "gbt_params": dict(self.gbt_params),
+            "mu": self.mu.tolist(),
+            "sd": self.sd.tolist(),
+            "selected": np.asarray(self.selected).tolist(),
+            "names": list(self.names),
+            "log_target": self.log_target,
+            "model": self.model.to_json(),
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "ResourcePipeline":
+        pipe = ResourcePipeline(n_selected=d["n_selected"],
+                                gbt_params=dict(d["gbt_params"]))
+        pipe.mu = np.asarray(d["mu"])
+        pipe.sd = np.asarray(d["sd"])
+        pipe.selected = np.asarray(d["selected"], dtype=np.int64)
+        pipe.names = list(d["names"])
+        pipe.log_target = d["log_target"]
+        pipe.model = GradientBoostedTrees.from_json(d["model"])
+        return pipe
 
 
 # ---------------------------------------------------------------------------
@@ -272,3 +328,18 @@ class MLScorer:
         for res, pipe in self.pipelines.items():
             score += self.weights.get(res, 1.0) * float(pipe.predict(x)[0])
         return score
+
+    def to_json(self) -> dict:
+        return {
+            "format": "ml-scorer/v1",
+            "weights": dict(self.weights),
+            "pipelines": {k: p.to_json() for k, p in self.pipelines.items()},
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "MLScorer":
+        if d.get("format") != "ml-scorer/v1":
+            raise ValueError(f"not an ml scorer: format={d.get('format')!r}")
+        pipes = {k: ResourcePipeline.from_json(p)
+                 for k, p in d["pipelines"].items()}
+        return MLScorer(pipes, weights=dict(d["weights"]))

@@ -39,6 +39,7 @@ from dataclasses import asdict, dataclass, field
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
+from .artifact import CompiledBankingPlan, compile_plan
 from .controller import Program, unroll
 from .grouping import build_groups
 from .polytope import AccessGroup, Affine, Iterator, MemorySpec
@@ -121,18 +122,55 @@ def resolve_scorer(spec: ScorerLike) -> Tuple[str, Optional[Callable]]:
     return name, _SCORER_FACTORIES[spec]()
 
 
-def _ml_scorer_factory() -> Callable:
-    """Lazily train the Sec-3.5 ML cost model on a small synthetic corpus.
+_ML_SCORER_PATH: Optional[Path] = None
 
-    Heavy (fits one GBT pipeline per resource on first use); cached for the
-    process lifetime.  The training lock is held end-to-end so concurrent
-    planners share one model instead of each training their own.
+
+def set_ml_scorer_path(path: Optional[Union[str, Path]]) -> None:
+    """Where the trained ``"ml"`` scorer pipeline persists as JSON.
+
+    ``BankingPlanner(cache_dir=...)`` points this next to the plan cache
+    (``cache_dir/ml_scorer.json``) so one process's training warm-starts
+    every later one; ``None`` disables persistence.
+    """
+    global _ML_SCORER_PATH
+    with _ML_TRAIN_LOCK:
+        _ML_SCORER_PATH = Path(path) if path is not None else None
+
+
+def _ml_scorer_factory() -> Callable:
+    """The Sec-3.5 ML cost model: load a persisted pipeline when present,
+    otherwise train on a small synthetic corpus (heavy: one GBT pipeline
+    per resource) and persist it next to the plan cache.
+
+    Cached for the process lifetime; the lock is held end-to-end so
+    concurrent planners share one model instead of each training their own.
     """
     with _ML_TRAIN_LOCK:
         cached = _ml_scorer_factory.__dict__.get("_cached")
         if cached is not None:
             return cached
-        return _train_ml_scorer()
+        if _ML_SCORER_PATH is not None and _ML_SCORER_PATH.exists():
+            from .cost_model import MLScorer
+
+            try:
+                scorer = MLScorer.from_json(
+                    json.loads(_ML_SCORER_PATH.read_text()))
+            except (ValueError, KeyError, TypeError, json.JSONDecodeError,
+                    OSError):
+                pass  # damaged/unreadable pipeline file: retrain below
+            else:
+                _ml_scorer_factory.__dict__["_cached"] = scorer
+                return scorer
+        scorer = _train_ml_scorer()
+        if _ML_SCORER_PATH is not None:
+            try:
+                _ML_SCORER_PATH.parent.mkdir(parents=True, exist_ok=True)
+                tmp = _ML_SCORER_PATH.with_suffix(".json.tmp")
+                tmp.write_text(json.dumps(scorer.to_json()))
+                tmp.replace(_ML_SCORER_PATH)
+            except OSError:
+                pass  # persistence is best-effort; the in-memory cache holds
+        return scorer
 
 
 def _train_ml_scorer() -> Callable:
@@ -294,6 +332,19 @@ class BankingPlan:
     solutions: List[BankingSolution] = field(default_factory=list)
     groups: List[AccessGroup] = field(default_factory=list)
     error: str = ""
+
+    # -- compilation ---------------------------------------------------------
+    def compile(self, backend: str = "jax") -> "CompiledBankingPlan":
+        """Lower the chosen scheme to an executable CompiledBankingPlan.
+
+        Plans produced by a planner route through that planner's compile
+        cache (keyed by plan signature + backend, persisted alongside the
+        JSON plan cache); detached plans compile standalone.
+        """
+        owner = getattr(self, "_planner", None)
+        if owner is not None:
+            return owner.compile(self, backend=backend)
+        return compile_plan(self, backend=backend)
 
     # -- report compatibility ------------------------------------------------
     def to_report(self):
@@ -475,6 +526,9 @@ class PlannerStats:
     disk_hits: int = 0
     misses: int = 0
     solves: int = 0
+    compiles: int = 0
+    compile_hits: int = 0
+    compile_disk_hits: int = 0
 
 
 class BankingPlanner:
@@ -499,18 +553,33 @@ class BankingPlanner:
         self.max_workers = max_workers
         self.stats = PlannerStats()
         self._cache: Dict[str, BankingPlan] = {}
+        self._compiled: Dict[str, CompiledBankingPlan] = {}
         # strong refs to callable scorers keyed by their cache name: keeps
         # the id() embedded in the key unique for the cache's lifetime
         # (a GC'd lambda's address could otherwise be reused by a new one)
         self._scorer_pins: Dict[str, object] = {}
         self._lock = threading.Lock()
+        if self.cache_dir is not None:
+            # trained "ml" pipelines persist next to the plan cache.
+            # First planner with a cache_dir wins: a later throwaway
+            # planner must not silently redirect where the process-wide
+            # scorer persists (set_ml_scorer_path overrides explicitly).
+            with _ML_TRAIN_LOCK:
+                global _ML_SCORER_PATH
+                if _ML_SCORER_PATH is None:
+                    _ML_SCORER_PATH = self.cache_dir / "ml_scorer.json"
 
     # -- cache plumbing ------------------------------------------------------
     def _cache_key(self, signature: str, scorer_name: str) -> str:
         return f"{signature}/{scorer_name}"
 
-    @staticmethod
-    def _hit_copy(hit: BankingPlan, memory: str, status: str) -> BankingPlan:
+    def _adopt(self, plan: BankingPlan) -> BankingPlan:
+        """Attach the planner backref so plan.compile() hits our caches."""
+        plan._planner = self
+        return plan
+
+    def _hit_copy(self, hit: BankingPlan, memory: str,
+                  status: str) -> BankingPlan:
         """Cache-hit view: own lists (so caller mutations can't poison the
         cache) relabeled for the requesting memory.  Signatures are
         structural, so the underlying solutions may carry the name of the
@@ -520,7 +589,7 @@ class BankingPlanner:
         out.memory = memory
         out.solutions = list(hit.solutions)
         out.groups = list(hit.groups)
-        return out
+        return self._adopt(out)
 
     def _disk_path(self, signature: str, scorer_name: str) -> Optional[Path]:
         if self.cache_dir is None:
@@ -528,13 +597,32 @@ class BankingPlanner:
         safe = scorer_name.replace(":", "_").replace("/", "_")
         return self.cache_dir / f"{signature}.{safe}.json"
 
+    def _compiled_disk_path(self, signature: str, scorer_name: str,
+                            backend: str) -> Optional[Path]:
+        if self.cache_dir is None:
+            return None
+        safe = scorer_name.replace(":", "_").replace("/", "_")
+        return self.cache_dir / f"{signature}.{safe}.{backend}.compiled.json"
+
     def warm_start(self, path: Union[str, Path]) -> int:
-        """Preload plans from a directory (or a single JSON file) into the
-        in-memory cache.  Returns the number of plans loaded."""
+        """Preload plans -- and their compiled artifacts -- from a directory
+        (or a single JSON file) into the in-memory caches.  Returns the
+        number of plans + artifacts loaded; a warm-started planner skips
+        both re-solving and re-lowering."""
         path = Path(path)
         files = sorted(path.glob("*.json")) if path.is_dir() else [path]
         n = 0
         for f in files:
+            if f.name.endswith(".compiled.json"):
+                try:
+                    art = CompiledBankingPlan.load(f)
+                except (ValueError, KeyError, json.JSONDecodeError, OSError):
+                    continue
+                with self._lock:
+                    self._compiled[self._compile_key(
+                        art.signature, art.scorer_name, art.backend)] = art
+                n += 1
+                continue
             try:
                 plan = BankingPlan.load(f)
             except (ValueError, KeyError, json.JSONDecodeError, OSError):
@@ -548,7 +636,50 @@ class BankingPlanner:
     def clear_cache(self) -> None:
         with self._lock:
             self._cache.clear()
+            self._compiled.clear()
             self._scorer_pins.clear()
+
+    # -- compilation ---------------------------------------------------------
+    def _compile_key(self, signature: str, scorer_name: str,
+                     backend: str) -> str:
+        return f"{signature}/{scorer_name}/{backend}"
+
+    def compile(self, plan: BankingPlan,
+                backend: str = "jax") -> CompiledBankingPlan:
+        """Lower ``plan`` to a CompiledBankingPlan through the compile
+        cache.
+
+        Artifacts are keyed by (plan signature, scorer, backend) and
+        persist as ``<sig>.<scorer>.<backend>.compiled.json`` alongside the
+        JSON plan cache, so a warm-started planner skips re-lowering the
+        resolution circuits as well as re-solving."""
+        key = self._compile_key(plan.signature, plan.scorer_name, backend)
+        with self._lock:
+            hit = self._compiled.get(key)
+        if hit is not None:
+            self.stats.compile_hits += 1
+            return hit
+        disk = self._compiled_disk_path(plan.signature, plan.scorer_name,
+                                        backend)
+        if disk is not None and disk.exists():
+            try:
+                art = CompiledBankingPlan.load(disk)
+            except (ValueError, KeyError, TypeError, json.JSONDecodeError,
+                    OSError):
+                pass  # damaged/unreadable artifact: re-lower below
+            else:
+                with self._lock:
+                    self._compiled[key] = art
+                self.stats.compile_disk_hits += 1
+                return art
+        art = compile_plan(plan, backend=backend)
+        art.scorer_name = plan.scorer_name
+        self.stats.compiles += 1
+        with self._lock:
+            self._compiled[key] = art
+        if disk is not None:
+            art.save(disk)
+        return art
 
     # -- planning ------------------------------------------------------------
     def signature(self, program: Program, memory: str,
@@ -593,8 +724,8 @@ class BankingPlanner:
                 try:
                     plan = BankingPlan.load(disk)
                 except (ValueError, KeyError, TypeError,
-                        json.JSONDecodeError):
-                    pass  # damaged plan file: fall through and re-solve
+                        json.JSONDecodeError, OSError):
+                    pass  # damaged/unreadable plan: fall through and re-solve
                 else:
                     with self._lock:
                         self._cache[key] = plan
@@ -626,7 +757,7 @@ class BankingPlanner:
         disk = self._disk_path(sig, scorer_name)
         if disk is not None:
             plan.save(disk)
-        return plan
+        return self._adopt(plan)
 
     def plan_all(self, program: Program, *,
                  opts: Optional[SolverOptions] = None,
@@ -693,13 +824,16 @@ def default_planner() -> BankingPlanner:
 __all__ = [
     "BankingPlan",
     "BankingPlanner",
+    "CompiledBankingPlan",
     "PlanRequest",
     "PlannerStats",
     "canonical_signature",
+    "compile_plan",
     "default_planner",
     "program_signature",
     "rank_solutions",
     "register_scorer",
     "registered_scorers",
     "resolve_scorer",
+    "set_ml_scorer_path",
 ]

@@ -350,12 +350,13 @@ def cost(node: Node, w: int = _W,
     return total
 
 
-def lower_jnp(node: Node) -> Callable:
-    """Compile the op graph to a jnp-traceable python function f(**vars).
+def _lower_graph(node: Node, const_fn: Callable,
+                 where_fn: Callable) -> Callable:
+    """Shared DAG interpreter behind ``lower_jnp`` / ``lower_np``: one op
+    dispatch, parameterized by the backend's const constructor and select.
 
     Memoized over the DAG so shared subexpressions trace once (the rewrites
     produce heavy sharing; naive recursion is exponential)."""
-    import jax.numpy as jnp
 
     def run(n: Node, env, memo):
         key = id(n)
@@ -365,7 +366,7 @@ def lower_jnp(node: Node) -> Callable:
         if op == "var":
             out = env[n.name]
         elif op == "const":
-            out = jnp.int32(n.value)
+            out = const_fn(n.value)
         else:
             a = run(n.args[0], env, memo)
             if op == "shl":
@@ -389,7 +390,7 @@ def lower_jnp(node: Node) -> Callable:
                 elif op == "ge":
                     out = a >= b
                 elif op == "select":
-                    out = jnp.where(a, b, run(n.args[2], env, memo))
+                    out = where_fn(a, b, run(n.args[2], env, memo))
                 else:
                     raise ValueError(op)
         memo[key] = out
@@ -399,6 +400,20 @@ def lower_jnp(node: Node) -> Callable:
         return run(node, env, {})
 
     return fn
+
+
+def lower_jnp(node: Node) -> Callable:
+    """Compile the op graph to a jnp-traceable python function f(**vars)."""
+    import jax.numpy as jnp
+
+    return _lower_graph(node, jnp.int32, jnp.where)
+
+
+def lower_np(node: Node) -> Callable:
+    """Compile the op graph to a vectorized numpy function f(**vars)."""
+    import numpy as np
+
+    return _lower_graph(node, np.int64, np.where)
 
 
 def count_raw_ops(node: Node) -> Dict[str, int]:

@@ -1,9 +1,9 @@
 """Banked gather: the paper's bank-resolution circuit as a Pallas kernel.
 
 The memory is stored *bank-major* -- physical layout (N_banks, bank_volume,
-row_width) produced by a BankingSolution -- and the kernel gathers logical
-rows by evaluating the bank-address / bank-offset equations (Eq. 1-2) with
-the Sec-3.4 strength-reduced arithmetic.
+row_width) owned by a ``CompiledBankingPlan`` -- and the kernel gathers
+logical rows by evaluating the bank-address / bank-offset equations
+(Eq. 1-2) with the Sec-3.4 strength-reduced arithmetic.
 
 TPU adaptation of the circuit: the BA/BO arithmetic runs inside the
 *index_map* of a scalar-prefetch BlockSpec -- the same place an FPGA would
@@ -13,52 +13,22 @@ prefetched index; Crandall/NAF rewrites shorten the scalar index path
 exactly as they eliminate DSPs on the FPGA (the TPU scalar core has no
 integer divide either -- XLA emits long multiply sequences for /C and %C).
 
+This module is the *raw kernel only*: it takes the already-compiled
+``ba_fn`` / ``bo_fn`` resolution callables.  Lowering a banking scheme to
+those callables (and to the pack/unpack layout converters) is the job of
+``repro.core.artifact.CompiledBankingPlan`` -- use ``plan.compile()`` and
+call ``artifact.gather(table, rows)`` instead of binding this directly.
+
 Used by the paged-KV cache (pages = banks) and as the embedding-row gather.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
-
-from ..core.solver import BankingSolution
-from ..core.transforms import Node, lower_jnp
-
-
-def resolution_fns(sol: BankingSolution) -> Tuple[Callable, Callable]:
-    """(ba_fn, bo_fn) over a flat logical address, from the solution graphs.
-
-    For 1-D memories the graphs take x0 = flat address directly; for n-D the
-    caller decomposes the address (row-major) before calling.
-    """
-    ba_graph = sol.resolution_ba
-    if isinstance(ba_graph, tuple):  # multidim: fold per-dim BAs row-major
-        bas = [lower_jnp(g) for g in ba_graph]
-        Ns = sol.geometry.Ns
-
-        def ba_fn(*xs):
-            out = None
-            for f, n in zip(bas, Ns):
-                b = f(**{f"x{i}": x for i, x in enumerate(xs)})
-                out = b if out is None else out * n + b
-            return out
-    else:
-        f = lower_jnp(ba_graph)
-
-        def ba_fn(*xs):
-            return f(**{f"x{i}": x for i, x in enumerate(xs)})
-
-    g = lower_jnp(sol.resolution_bo)
-
-    def bo_fn(*xs):
-        return g(**{f"x{i}": x for i, x in enumerate(xs)})
-
-    return ba_fn, bo_fn
 
 
 def _gather_kernel(idx_ref, table_ref, o_ref):
@@ -70,12 +40,13 @@ def banked_gather(table: jax.Array, indices: jax.Array,
                   ba_fn: Callable, bo_fn: Callable, *,
                   interpret=False) -> jax.Array:
     """table: (N_banks, bank_volume, D) bank-major storage.
-    indices: (T,) int32 flat logical addresses (1-D memory view).
+    indices: (T,) int32 flat logical addresses.
     Returns (T, D) gathered rows.
 
-    The bank-resolution arithmetic (ba_fn/bo_fn, built from the transformed
-    op graphs) executes in the BlockSpec index_map on the prefetched index
-    scalars -- one (1, D) row tile is streamed per grid step.
+    The bank-resolution arithmetic (ba_fn/bo_fn, the compiled artifact's
+    transformed op graphs) executes in the BlockSpec index_map on the
+    prefetched index scalars -- one (1, D) row tile is streamed per grid
+    step.
     """
     T = indices.shape[0]
     N, V, D = table.shape
@@ -96,31 +67,3 @@ def banked_gather(table: jax.Array, indices: jax.Array,
         out_shape=jax.ShapeDtypeStruct((T, D), table.dtype),
         interpret=interpret,
     )(indices, table)
-
-
-def pack_banked(flat: jax.Array, sol: BankingSolution) -> jax.Array:
-    """Layout conversion: logical (A, D) rows -> bank-major (N, V, D).
-
-    Pure-jnp scatter using the *reference* (untransformed) BA/BO equations
-    from the geometry object -- tests assert the kernel's transformed
-    arithmetic agrees with this layout.
-    """
-    A, D = flat.shape
-    geo = sol.geometry
-    dims = sol.memory.dims
-    addrs = jnp.arange(A)
-    if sol.kind == "flat":
-        import numpy as np
-        ba = np.array([geo.bank_address((int(a),)) for a in range(A)])
-        bo = np.array([geo.bank_offset((int(a),), dims) for a in range(A)])
-        nb = geo.N
-    else:
-        import numpy as np
-        Ns = geo.Ns
-        ba_t = [geo.bank_address((int(a),)) for a in range(A)]
-        ba = np.array([b[0] for b in ba_t])
-        bo = np.array([geo.bank_offset((int(a),), dims) for a in range(A)])
-        nb = geo.num_banks
-    V = int(sol.bank_volume)
-    table = jnp.zeros((nb, V, D), flat.dtype)
-    return table.at[ba, bo].set(flat)

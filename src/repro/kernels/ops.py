@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .banked_gather import banked_gather, pack_banked, resolution_fns
+from ..core.artifact import as_compiled
 from .flash_attention import flash_attention
 from .moe_dispatch import moe_combine, moe_dispatch
 from .ssd_chunk import ssd_chunk
@@ -43,12 +43,22 @@ def mha(q, k, v, *, causal=True, window=0, kv_len=None,
     return out.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3)
 
 
-def gather_banked(table, indices, solution, *, interpret=None):
-    """Gather logical rows from a bank-major table using the solution's
-    strength-reduced resolution arithmetic (see kernels/banked_gather.py)."""
+def gather_banked(table, indices, compiled, *, interpret=None):
+    """Gather logical rows from a bank-major table through a compiled
+    banking artifact (``plan.compile()``); its strength-reduced resolution
+    arithmetic runs in the Pallas index map (see kernels/banked_gather.py).
+
+    Accepts a ``CompiledBankingPlan`` or a ``BankingPlan``; passing a raw
+    ``BankingSolution`` still works but is deprecated."""
     interpret = _default_interpret() if interpret is None else interpret
-    ba_fn, bo_fn = resolution_fns(solution)
-    return banked_gather(table, indices, ba_fn, bo_fn, interpret=interpret)
+    return as_compiled(compiled).gather(table, indices, interpret=interpret)
+
+
+def pack_banked(flat, compiled):
+    """Layout conversion: logical (A, D) rows -> bank-major (N, V, D) per
+    the compiled artifact's physical layout (reference Eq. 1-2 placement --
+    tests assert the kernel's transformed arithmetic agrees with it)."""
+    return as_compiled(compiled).pack(flat)
 
 
 def dispatch(x, slot_token, *, interpret=None):

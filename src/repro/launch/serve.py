@@ -34,12 +34,16 @@ def main():
     if args.smoke:
         cfg = cfg.reduced()
     model = get_model(cfg)
-    server = Server(model, max_batch=args.max_batch, max_len=args.max_len)
 
-    sol = page_solution(cfg, max_len=args.max_len,
+    art = page_solution(cfg, max_len=args.max_len,
                         page=min(16, args.max_len // 4),
                         readers=args.max_batch)
-    print("KV pool banking scheme:", sol.describe())
+    print("KV pool banking scheme:", art.describe())
+    server = Server(model, max_batch=args.max_batch, max_len=args.max_len,
+                    kv_plan=art)
+    print(f"page pool: {server.pager.slots} slots x "
+          f"{server.pager.pages_per_slot} pages x "
+          f"{server.pager.page_size} tokens")
 
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):

@@ -12,10 +12,12 @@ no collective on the access path).  Dims that cannot bank conflict-free
 -- precisely the paper's 'many valid geometries, pick the cheap one'.
 
 The result is memoized per (role, dims, axis size) and the underlying
-banking problems go through the shared ``BankingPlanner``, whose canonical
-program signatures dedup structurally identical problems across roles; the
-same BankingSolution objects drive the Pallas banked-gather kernel, so
-device-level and kernel-level banking share one solver.
+banking problems go through the shared ``BankingPlanner``; the qualifying
+scheme comes back as a **compiled artifact** (``core.artifact.lane_compile``)
+whose ``to_partition_spec`` supplies the mesh-axis placement -- no geometry
+reverse-engineering here.  The same compiled artifacts drive the Pallas
+banked-gather kernel, so device-level and kernel-level banking share one
+solver *and* one lowering.
 """
 
 from __future__ import annotations
@@ -28,6 +30,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeConfig
+from ..core.artifact import CompiledBankingPlan, lane_compile
 from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
 from ..core.planner import default_planner
 from ..core.polytope import Affine, MemorySpec
@@ -35,17 +38,17 @@ from ..core.solver import SolverOptions
 
 
 @functools.lru_cache(maxsize=None)
-def bankable(dim_size: int, lanes: int) -> bool:
-    """Can `dim_size` be banked conflict-free FO=1 across `lanes` lanes?
+def lane_artifact(dim_size: int, lanes: int) -> Optional[CompiledBankingPlan]:
+    """Compiled conflict-free FO=1 lane banking of `dim_size`, or None.
 
-    Poses the canonical strided access problem to the banking solver: lanes
-    read disjoint contiguous blocks.  Equivalent to lanes | dim (block
-    scheme), but answered by the solver so the decision is the paper's.
+    Poses the canonical strided access problem to the banking planner:
+    lanes read disjoint contiguous blocks.  Equivalent to lanes | dim
+    (block scheme), but answered by the solver so the decision is the
+    paper's -- and returned as the compiled artifact whose
+    ``to_partition_spec`` places the banked dim on a mesh axis.
     """
-    if lanes <= 1:
-        return True
-    if dim_size < lanes or dim_size % lanes:
-        return False
+    if lanes <= 1 or dim_size < lanes or dim_size % lanes:
+        return None
     blk = dim_size // lanes
     mem = MemorySpec("t", dims=(dim_size,), ports=1)
     # lane l owns the contiguous block [l*blk, (l+1)*blk): outer counter
@@ -61,11 +64,12 @@ def bankable(dim_size: int, lanes: int) -> bool:
                          b_candidates=(blk, 1) if blk > 1 else (1,),
                          allow_multidim=False, allow_duplication=False)
     plan = default_planner().plan(prog, "t", opts=opts)
-    for s in plan.solutions:
-        if (s.kind == "flat" and s.num_banks % lanes == 0
-                and max(s.fan_outs) == 1):
-            return True
-    return False
+    return lane_compile(plan, lanes)
+
+
+def bankable(dim_size: int, lanes: int) -> bool:
+    """Can `dim_size` be banked conflict-free FO=1 across `lanes` lanes?"""
+    return lanes <= 1 or lane_artifact(dim_size, lanes) is not None
 
 
 def first_bankable(dims: Sequence[int], candidates: Sequence[int],
@@ -119,22 +123,33 @@ def _param_spec(path: str, shape: Tuple[int, ...], tp_size: int,
     }
     cands_rev = reversed_candidates.get(name, ())
     spec = [None] * nd
-    tp_dim = None
     for c in cands_rev:
         d = nd - 1 - c
-        if d >= 0 and bankable(shape[d], tp_size):
-            tp_dim = d
+        if d < 0:
+            continue
+        if tp_size <= 1:
+            spec[d] = "model"   # single-lane axis: placement is free
             break
-    if tp_dim is not None:
-        spec[tp_dim] = "model"
+        art = lane_artifact(shape[d], tp_size)
+        if art is not None:
+            # the artifact's own PartitionSpec bridge places the banked
+            # (single) dim of its 1-D problem on the mesh axis
+            spec[d] = art.to_partition_spec("model")[0]
+            break
     if fsdp:
         # ZeRO-3 style: also cut the largest remaining dim across data
         # (and pod, for optimizer state -- fsdp_axes=("data","pod"))
+        fsdp_entry = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
         order = sorted(range(nd), key=lambda d: -shape[d])
         for d in order:
-            if spec[d] is None and shape[d] >= 2 * fsdp_size \
-                    and bankable(shape[d], fsdp_size):
-                spec[d] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            if spec[d] is not None or shape[d] < 2 * fsdp_size:
+                continue
+            if fsdp_size <= 1:
+                spec[d] = fsdp_entry
+                break
+            art = lane_artifact(shape[d], fsdp_size)
+            if art is not None:
+                spec[d] = art.to_partition_spec(fsdp_entry)[0]
                 break
     return P(*spec)
 

@@ -10,22 +10,28 @@ Serving structure (vLLM-style, TPU-native):
 * finished sequences (EOS or max_len) free their slot for the next queued
   request -- continuous batching.
 
-The cache pages are banks from the banking solver (pages = banks, page
-size = blocking factor B); `page_solution()` exposes the scheme used so the
-Pallas banked-gather kernel and this scheduler agree on the layout.
+The cache pages are banks from the banking planner (pages = banks, page
+size = bank volume): ``page_solution()`` returns the **compiled** plan
+artifact (a ``CompiledBankingPlan``), and the page accounting
+(:class:`KVPagePool`) reads page count and page size off that artifact's
+physical layout instead of re-deriving "pages = banks" arithmetic locally
+-- the scheduler and the Pallas banked-gather kernel agree on the layout
+by construction.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..core.artifact import CompiledBankingPlan
 from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
 from ..core.planner import default_planner
 from ..core.polytope import Affine, MemorySpec
@@ -43,16 +49,18 @@ class Request:
 
 
 def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
-                  readers: int = 8):
-    """Banking scheme for the KV pool: pages = banks, page size = B.
+                  readers: int = 8) -> CompiledBankingPlan:
+    """Compiled banking artifact for the KV pool: pages = banks.
 
     ``readers`` concurrent decode lanes must never contend on a page.
 
     Every decode tick poses the structurally identical KV-pool problem, so
-    this goes through the shared planner: the first call solves, every
-    later call is a signature-keyed cache hit (zero solver work on the
-    serving hot path)."""
-    npages = max_len // page
+    this goes through the shared planner twice over: the first call solves
+    and lowers, every later call is a signature-keyed cache hit for both
+    the plan and its compiled artifact (zero solver or lowering work on
+    the serving hot path).  The returned artifact owns the physical layout
+    the pager and the banked-gather kernel share.
+    """
     mem = MemorySpec("kv_pool", dims=(max_len,), word_bits=16, ports=1)
     prog = Program(
         root=Ctrl("decode", Sched.INNER,
@@ -65,19 +73,67 @@ def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
     plan = default_planner().plan(
         prog, "kv_pool",
         opts=SolverOptions(b_candidates=(page, 1), allow_multidim=False))
-    return plan.best
+    return plan.compile()
+
+
+class KVPagePool:
+    """Page accounting over a compiled KV banking artifact's layout.
+
+    Pages *are* the artifact's banks and the page size is its bank volume,
+    read straight off ``artifact.layout`` -- no local page math.  The
+    banking problem is posed per sequence (``dims = (max_len,)``), and the
+    decode cache is a dense per-slot region, so every slot owns its own
+    ``n_banks`` pages: admission succeeds iff the request's token budget
+    fits one slot's pages.  Pages release when the sequence finishes.
+    """
+
+    def __init__(self, artifact: CompiledBankingPlan, slots: int = 1):
+        self.layout = artifact.layout
+        self.page_size = int(self.layout.bank_volume)
+        self.pages_per_slot = int(self.layout.n_banks)
+        self.slots = slots
+        self.owned: Dict[int, int] = {}   # slot -> allocated pages
+
+    @property
+    def total_pages(self) -> int:
+        return self.pages_per_slot * self.slots
+
+    @property
+    def used_pages(self) -> int:
+        return sum(self.owned.values())
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, -(-int(n_tokens) // self.page_size))
+
+    def fits(self, n_tokens: int) -> bool:
+        """Can this token budget ever be admitted (into one slot)?"""
+        return self.pages_for(n_tokens) <= self.pages_per_slot
+
+    def try_alloc(self, slot: int, n_tokens: int) -> bool:
+        need = self.pages_for(n_tokens)
+        if need > self.pages_per_slot or slot in self.owned:
+            return False
+        self.owned[slot] = need
+        return True
+
+    def release(self, slot: int) -> None:
+        self.owned.pop(slot, None)
 
 
 class Server:
-    def __init__(self, model: Model, max_batch: int = 4, max_len: int = 128):
+    def __init__(self, model: Model, max_batch: int = 4, max_len: int = 128,
+                 kv_plan: Optional[CompiledBankingPlan] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_batch = max_batch
         self.max_len = max_len
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}   # slot -> request
         self._decode = jax.jit(steps_mod.make_serve_step(model))
+        self._params = model.init(jax.random.PRNGKey(0))
         self.cache = model.init_cache(max_batch, max_len)
+        self.pager = (KVPagePool(kv_plan, slots=max_batch)
+                      if kv_plan is not None else None)
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.positions = np.zeros(max_batch, np.int64)
         self.ticks = 0
@@ -90,7 +146,16 @@ class Server:
         for slot in range(self.max_batch):
             if slot in self.active or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue[0]
+            if self.pager is not None:
+                need_tokens = len(req.prompt) + req.max_new
+                if not self.pager.fits(need_tokens):
+                    # can never fit a slot: reject instead of deadlocking
+                    self.queue.popleft()
+                    req.done = True
+                    continue
+                self.pager.try_alloc(slot, need_tokens)
+            self.queue.popleft()
             # per-request prefill: run the prompt through decode one token at
             # a time into this slot (batch=1 prefill folded into the shared
             # cache; a production server runs a separate prefill graph)
@@ -98,7 +163,7 @@ class Server:
             for t in toks:
                 self.tokens = self.tokens.at[slot, 0].set(int(t))
                 nxt, _, self.cache = self._decode(
-                    _slot_params(self), self.cache, self.tokens)
+                    self._params, self.cache, self.tokens)
             req._next = int(np.asarray(nxt)[slot, 0])
             self.active[slot] = req
 
@@ -110,7 +175,7 @@ class Server:
         for slot, req in self.active.items():
             self.tokens = self.tokens.at[slot, 0].set(
                 getattr(req, "_next", 1))
-        nxt, _, self.cache = self._decode(_slot_params(self), self.cache,
+        nxt, _, self.cache = self._decode(self._params, self.cache,
                                           self.tokens)
         nxt = np.asarray(nxt)
         finished = []
@@ -123,14 +188,10 @@ class Server:
                 finished.append(slot)
         for slot in finished:
             del self.active[slot]
+            if self.pager is not None:
+                self.pager.release(slot)
         self.ticks += 1
 
     def run(self, max_ticks: int = 1000):
         while (self.queue or self.active) and self.ticks < max_ticks:
             self.tick()
-
-
-def _slot_params(server: Server):
-    if not hasattr(server, "_params"):
-        server._params = server.model.init(jax.random.PRNGKey(0))
-    return server._params

@@ -110,14 +110,18 @@ def test_banked_gather_sweep(A, par, ports):
                  counters=[Counter("i", 0, 1, A // par, par=par)],
                  accesses=[AccessDecl("t", (Affine.of(i=1),))])
     prog = Program(root=inner, memories={"t": mem})
-    sol = BankingPlanner().plan(prog, "t").best
+    art = BankingPlanner().plan(prog, "t").compile()
     D = 8
     flat = _rand((A, D), jnp.float32)
-    table = ops.pack_banked(flat, sol)
+    table = art.pack(flat)
+    assert table.shape == art.layout.table_shape(D)
     idx = jnp.asarray(RNG.integers(0, A, size=(24,)), jnp.int32)
-    got = ops.gather_banked(table, idx, sol)
+    got = art.gather(table, idx)
     want = ref.banked_gather_reference(flat, idx)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the ops-level wrappers accept the compiled artifact too
+    got2 = ops.gather_banked(ops.pack_banked(flat, art), idx, art)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
 
 
 @pytest.mark.slow

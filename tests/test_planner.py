@@ -113,14 +113,16 @@ def test_plan_json_roundtrip_preserves_scheme():
         (b0.num_banks, b0.bank_volume, b0.P, b0.pad)
     assert b1.fan_outs == b0.fan_outs and b1.score == b0.score
     assert b1.resources.total.lut == pytest.approx(b0.resources.total.lut)
-    # the rebuilt resolution graphs drive the banked-gather kernel
-    from repro.kernels import ops, ref
+    # the reloaded plan compiles to an artifact that drives the kernel
+    from repro.kernels import ref
+    from repro.core import compile_plan
     import jax.numpy as jnp
+    art = compile_plan(back)
     flat = jnp.asarray(np.random.default_rng(0).normal(size=(256, 4)),
                        jnp.float32)
-    table = ops.pack_banked(flat, b1)
+    table = art.pack(flat)
     idx = jnp.asarray([0, 5, 200, 131], jnp.int32)
-    got = ops.gather_banked(table, idx, b1)
+    got = art.gather(table, idx)
     assert (np.asarray(got) == np.asarray(
         ref.banked_gather_reference(flat, idx))).all()
 
@@ -255,6 +257,67 @@ def test_plan_all_timeout_yields_timeout_plan(monkeypatch):
     plans = BankingPlanner().plan_all(_reader_program(), timeout=0.05)
     assert plans["table"].status == "timeout"
     assert plans["table"].best is None
+
+
+# ---------------------------------------------------------------------------
+# ML scorer persistence (trained pipelines live next to the plan cache)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_ml_scorer():
+    from repro.core.cost_model import MLScorer, ResourcePipeline
+    from repro.core.features import FEATURE_NAMES
+
+    rng = np.random.default_rng(0)
+    X = rng.uniform(1, 8, size=(24, len(FEATURE_NAMES)))
+    pipes = {
+        k: ResourcePipeline(gbt_params=dict(n_estimators=3)).fit(
+            X, rng.uniform(10, 100, size=24))
+        for k in ("lut", "ff")
+    }
+    return MLScorer(pipes), X
+
+
+def test_ml_scorer_json_roundtrip_predicts_identically():
+    from repro.core.cost_model import MLScorer
+
+    scorer, X = _tiny_ml_scorer()
+    back = MLScorer.from_json(json.loads(json.dumps(scorer.to_json())))
+    for k in scorer.pipelines:
+        np.testing.assert_allclose(back.pipelines[k].predict(X),
+                                   scorer.pipelines[k].predict(X))
+    assert back.weights == scorer.weights
+
+
+def test_ml_factory_loads_persisted_pipeline_instead_of_training(
+        tmp_path, monkeypatch):
+    scorer, _ = _tiny_ml_scorer()
+    path = tmp_path / "ml_scorer.json"
+    path.write_text(json.dumps(scorer.to_json()))
+
+    monkeypatch.setattr(planner_mod, "_ML_SCORER_PATH", path)
+    monkeypatch.setattr(planner_mod._ml_scorer_factory, "_cached", None,
+                        raising=False)
+
+    def boom():
+        raise AssertionError("factory re-trained despite persisted pipeline")
+
+    monkeypatch.setattr(planner_mod, "_train_ml_scorer", boom)
+    _, loaded = resolve_scorer("ml")
+    assert set(loaded.pipelines) == set(scorer.pipelines)
+    # corrupt pipeline file falls back to training
+    path.write_text("{not json")
+    monkeypatch.setattr(planner_mod._ml_scorer_factory, "_cached", None,
+                        raising=False)
+    with pytest.raises(AssertionError, match="re-trained"):
+        resolve_scorer("ml")
+
+
+def test_planner_cache_dir_points_ml_scorer_next_to_plans(
+        tmp_path, monkeypatch):
+    monkeypatch.setattr(planner_mod, "_ML_SCORER_PATH", None)
+    BankingPlanner(cache_dir=tmp_path)
+    assert planner_mod._ML_SCORER_PATH == tmp_path / "ml_scorer.json"
 
 
 # ---------------------------------------------------------------------------
