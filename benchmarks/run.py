@@ -169,6 +169,62 @@ def bench_compile_cache() -> None:
           f"cold={cold_us:.0f}us;speedup={cold_us / max(warm_us, 1e-9):.0f}x")
 
 
+def bench_plan_service() -> None:
+    """The async front door: submit latency, time-to-first-fallback
+    artifact, time-to-solved-swap, and the warm-store hit -- the four
+    numbers that decide whether serving ever blocks on the solver.
+    Emitted both as a CSV row and as results/BENCH_plan_service.json."""
+    import tempfile
+
+    from repro.core import PlanService, problems
+    from repro.core.store import DirectoryStore
+
+    # warm the jax import + trivial-lowering path so the fallback number
+    # measures the artifact machinery, not a first-time jax import
+    from repro.core import MemorySpec
+    from repro.core.artifact import compile_trivial
+    compile_trivial(MemorySpec("warm", dims=(8,), word_bits=16, ports=1))
+
+    prog = problems.build("sobel")
+    memname = list(prog.memories)[0]
+    with tempfile.TemporaryDirectory() as d:
+        svc = PlanService(store=DirectoryStore(d), workers=2)
+        t0 = time.perf_counter()
+        ticket = svc.submit(prog, memname)
+        submit_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        fb = ticket.fallback()
+        fallback_us = (time.perf_counter() - t0) * 1e6
+        ticket.result(timeout=120)
+        t0 = time.perf_counter()
+        ticket.artifact()
+        solved_swap_us = (time.perf_counter() - t0) * 1e6
+        time_to_solved_s = time.time() - ticket.submitted_at
+        # a second service over the same store: the cross-process warm hit
+        warm_svc = PlanService(store=DirectoryStore(d), workers=2)
+        t0 = time.perf_counter()
+        warm_ticket = warm_svc.submit(prog, memname)
+        warm_us = (time.perf_counter() - t0) * 1e6
+        assert warm_ticket.done(), "warm store must answer inside submit"
+        out = {
+            "submit_us": submit_us,
+            "fallback_artifact_us": fallback_us,
+            "fallback_banks": fb.n_banks,
+            "solved_swap_us": solved_swap_us,
+            "time_to_solved_s": time_to_solved_s,
+            "warm_store_hit_us": warm_us,
+            "warm_ticket_done": warm_ticket.done(),
+        }
+    with open("results/BENCH_plan_service.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("\n=== Plan service (submit / fallback / solved swap / warm) ===")
+    print(f"plan_service,{submit_us:.0f},"
+          f"fallback={fallback_us:.0f}us;"
+          f"solved_swap={solved_swap_us:.0f}us;"
+          f"time_to_solved={time_to_solved_s*1e3:.0f}ms;"
+          f"warm_hit={warm_us:.0f}us")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -180,6 +236,7 @@ def main() -> None:
     bench_solver()
     bench_planner_cache()
     bench_compile_cache()
+    bench_plan_service()
     bench_kernels()
     bench_tables(args.fast)
 

@@ -1,32 +1,30 @@
-"""Quickstart: the plan -> compile -> execute flow of the banking system.
+"""Quickstart: the submit -> ticket -> compile -> execute flow.
 
-1. **Plan**: ``BankingPlanner.plan`` poses the banking problem and returns
-   a durable ``BankingPlan`` keyed by a canonical program signature
-   (structurally identical programs hit the cache, never re-solve).
-2. **Compile**: ``plan.compile()`` lowers the chosen scheme ONCE into a
-   ``CompiledBankingPlan`` -- the executable artifact owning the physical
-   layout, the jit-ready BA/BO resolution callables, pack/unpack, the
-   Pallas banked-gather binding, and the PartitionSpec bridge.  Artifacts
-   are cached on the planner by (plan signature, backend) and serialize
-   to JSON next to the plan cache.
-3. **Execute**: everything outside ``repro.core`` talks to the artifact;
-   direct access to ``BankingSolution`` fields (``.geometry``,
-   ``.resolution_ba``/``_bo``) from kernels/runtime/parallel code is
-   deprecated and gone.
+1. **Submit**: ``PlanService.submit`` poses the banking problem and
+   returns a ``PlanTicket`` immediately -- the solver runs on a worker
+   pool, not on your thread.  Warm caches and warm plan stores
+   (``store=`` / ``DirectoryStore``) answer before the ticket is even
+   returned.
+2. **Execute NOW**: ``ticket.fallback()`` is an always-available compiled
+   artifact (trivial single-bank scheme, zero solver work) -- pack data
+   and gather through the Pallas kernel while the real solve is in
+   flight.
+3. **Hot-swap**: once ``ticket.done()``, ``ticket.artifact()`` is the
+   solved ``CompiledBankingPlan``; unpack from the fallback layout and
+   repack into the solved one -- identical gather results, now with the
+   conflict-free multi-bank layout.
+
+The blocking path still exists: ``BankingPlanner.plan`` is literally
+``service.submit(...).result()`` -- one code path, two front doors.
 
     PYTHONPATH=src python examples/quickstart.py
-
-(The older free functions ``partition_memory`` / ``partition_all`` still
-work but are deprecated shims over this planner.)
 """
-
-import json
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AccessDecl, BankingPlanner, CompiledBankingPlan,
-                        Counter, Ctrl, MemorySpec, Program, Sched)
+from repro.core import (AccessDecl, Counter, Ctrl, MemorySpec, PlanService,
+                        Program, Sched)
 from repro.core.polytope import Affine
 from repro.kernels import ref
 
@@ -43,44 +41,50 @@ def main():
         memories={"table": mem},
     )
 
-    planner = BankingPlanner()          # scorer="proxy" by default
-    plan = planner.plan(program, "table")
-    print(f"signature: {plan.signature}")
-    print(f"groups: {[len(g) for g in plan.groups]}")
-    print(f"candidates examined: {plan.num_candidates} "
-          f"in {plan.solve_seconds*1e3:.1f} ms (scorer={plan.scorer_name})")
-    print("top 3 schemes:")
-    for s in plan.solutions[:3]:
-        print("  ", s.describe())
+    # SUBMIT: returns a ticket, not a plan -- the solve is backgrounded.
+    # (Pass store="plans/" to share solved plans across processes.)
+    service = PlanService(workers=2)
+    ticket = service.submit(program, "table")
+    print(f"submitted: signature={ticket.signature} status={ticket.status}")
 
-    # Structurally identical program -> signature-keyed cache hit, no solve.
-    again = planner.plan(program, "table")
-    print(f"replanning the same program: status={again.status} "
-          f"(stats: {planner.stats})")
-
-    # COMPILE: lower the chosen scheme once.  The artifact owns the layout
-    # and the Eq. 1-2 + Sec-3.4 resolution circuit; recompiling is a cache
-    # hit on the planner, and artifacts JSON-round-trip so a warm-started
-    # planner skips re-lowering too.
-    art = plan.compile()
-    print("compiled:", art.describe())
-    art = CompiledBankingPlan.from_json(json.loads(json.dumps(art.to_json())))
-
-    # EXECUTE: pack data bank-major per the artifact's layout and gather
-    # through the Pallas kernel -- the compiled bank-resolution arithmetic
-    # runs in the BlockSpec index_map.
+    # EXECUTE NOW: the fallback artifact needs no solver -- serve from it.
     D = 16
     flat = jnp.asarray(np.random.default_rng(0).normal(size=(256, D)),
                        jnp.float32)
-    table = art.pack(flat)
-    print(f"bank-major table shape: {art.layout.table_shape(D)}")
+    fb = ticket.fallback()
+    print("fallback :", fb.describe())
+    table = fb.pack(flat)
     idx = jnp.asarray([0, 7, 63, 101, 255, 128, 33, 200], jnp.int32)
-    got = art.gather(table, idx)
+    first = fb.gather(table, idx)
     want = ref.banked_gather_reference(flat, idx)
-    assert (np.asarray(got) == np.asarray(want)).all()
-    assert (np.asarray(art.unpack(table)) == np.asarray(flat)).all()
-    print(f"banked_gather over {art.n_banks} banks "
-          f"(from the JSON-round-tripped artifact): exact ✓")
+    assert (np.asarray(first) == np.asarray(want)).all()
+    print("served from the fallback while the solver ran: exact ✓")
+
+    # HOT-SWAP: block for the solved plan (a server would poll done()
+    # between ticks), repack, and gather identically through the solved
+    # resolution circuit -- the compiled BA/BO arithmetic runs in the
+    # Pallas BlockSpec index_map, where an FPGA would put the circuit.
+    plan = ticket.result(timeout=60)
+    print(f"solved   : {plan.num_candidates} candidates in "
+          f"{plan.solve_seconds*1e3:.1f} ms (scorer={plan.scorer_name})")
+    art = ticket.artifact()
+    print("artifact :", art.describe())
+    table = art.pack(fb.unpack(table))        # logical rows survive the swap
+    got = art.gather(table, idx)
+    assert (np.asarray(got) == np.asarray(first)).all()
+    print(f"hot-swapped to {art.n_banks} banks: identical gather ✓")
+
+    # Batched execution: a stacked (T, R) index matrix -- e.g. one decode
+    # tick's reads for every active sequence -- is ONE kernel launch.
+    ticks = jnp.stack([idx[:4], idx[4:]])     # (2 row-sets, 4 rows each)
+    batched = art.gather(table, ticks)
+    assert batched.shape == (2, 4, D)
+    print(f"batched gather over {ticks.shape} indices: one pallas_call ✓")
+
+    # Structurally identical resubmit: answered before the ticket returns.
+    again = service.submit(program, "table")
+    print(f"resubmit : done={again.done()} status={again.result().status} "
+          f"(service stats: {service.stats})")
     raw = plan.best.raw_ops
     print(f"raw mul/div/mod left in resolution arithmetic: {raw} "
           f"(DSP-free: {plan.best.dsp_free})")

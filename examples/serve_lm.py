@@ -1,5 +1,10 @@
 """Batched serving demo: continuous batching with KV-cache slots.
 
+The KV-pool banking problem goes through the async service front door:
+submit returns a ticket, the server's first ticks run from the ticket's
+trivial fallback artifact, and the page pool hot-swaps to the solved
+banking scheme between decode ticks.
+
     PYTHONPATH=src python examples/serve_lm.py
 """
 
@@ -7,18 +12,20 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import get_model
-from repro.runtime.server import Request, Server, page_solution
+from repro.runtime.server import Request, Server, page_ticket
 
 
 def main():
     cfg = get_arch("qwen2_7b").reduced()
+
+    # submit the banking problem FIRST: the solver runs in the background
+    # while the model is built -- nothing blocks on the ~1s cold solve
+    ticket = page_ticket(cfg, max_len=64, page=16, readers=4)
     model = get_model(cfg)
 
-    # compiled KV-pool banking artifact: the pager reads page count / page
-    # size off its physical layout (pages = banks, size = bank volume)
-    art = page_solution(cfg, max_len=64, page=16, readers=4)
-    print("KV pool banking scheme (pages = banks):", art.describe())
-    server = Server(model, max_batch=4, max_len=64, kv_plan=art)
+    server = Server(model, max_batch=4, max_len=64, kv_plan=ticket)
+    print("first-tick KV layout (pages = banks):",
+          server.pager.artifact.describe())
     print(f"page pool: {server.pager.slots} slots x "
           f"{server.pager.pages_per_slot} pages x "
           f"{server.pager.page_size} tokens")
@@ -29,8 +36,11 @@ def main():
         server.submit(Request(uid=uid, prompt=prompt.astype(np.int32),
                               max_new=8))
     server.run(max_ticks=200)
+    if server.swaps:
+        print("hot-swapped to the solved layout mid-serve:",
+              server.pager.artifact.describe())
     print(f"served 6 requests in {server.ticks} decode ticks "
-          f"(max_batch=4 slots)")
+          f"(max_batch=4 slots, {server.swaps} layout swap(s))")
     assert not server.queue and not server.active
 
 

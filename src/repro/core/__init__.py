@@ -1,16 +1,21 @@
 """Core banking system: the paper's contribution as a composable library.
 
-The front door is the planner subsystem (``BankingPlanner`` /
-``BankingPlan`` / ``PlanRequest``).  Plans *execute* through compiled
-artifacts: ``plan.compile()`` lowers the chosen scheme once into a
+The front door is the **service subsystem**: ``PlanService.submit`` poses
+a banking problem and returns a ``PlanTicket`` -- warm caches/stores
+answer before the ticket is returned, cold solves run on a worker pool,
+and ``ticket.fallback()`` gives an immediately executable trivial-scheme
+artifact to serve from until the solved one lands (hot-swap).  The
+blocking ``BankingPlanner.plan`` is a thin ``submit(...).result()`` over
+the same code path.  Plans *execute* through compiled artifacts:
+``plan.compile()`` lowers the chosen scheme once into a
 ``CompiledBankingPlan`` owning the physical layout, the jit-ready BA/BO
-resolution callables, pack/unpack, the Pallas gather binding, and the
-PartitionSpec bridge -- every consumer outside ``core/`` goes through it.
-The free functions ``partition_memory`` / ``partition_all`` are deprecated
-shims kept for compatibility.
+resolution callables, pack/unpack, the (batched) Pallas gather binding,
+and the PartitionSpec bridge -- every consumer outside ``core/`` goes
+through it.  Durability is a pluggable ``PlanStore``: ``MemoryStore`` in
+process, lock-file-guarded ``DirectoryStore`` across processes (the old
+``cache_dir=`` JSON layout).
 """
 
-from .api import BankingReport, partition_all, partition_memory
 from .artifact import (
     BankingLayout,
     CompiledBankingPlan,
@@ -18,17 +23,19 @@ from .artifact import (
     compile_geometry,
     compile_plan,
     compile_solution,
+    compile_trivial,
     lane_compile,
 )
 from .controller import AccessDecl, Counter, Ctrl, Program, Sched, Unroll, unroll
 from .geometry import FlatGeometry, MultiDimGeometry
-from .grouping import build_groups
 from .planner import (
     BankingPlan,
     BankingPlanner,
     PlanRequest,
+    PreparedRequest,
     canonical_signature,
     default_planner,
+    family_signature,
     program_signature,
     rank_solutions,
     register_scorer,
@@ -37,17 +44,28 @@ from .planner import (
     set_ml_scorer_path,
 )
 from .polytope import Access, AccessGroup, Affine, Iterator, MemorySpec
+from .service import (
+    PlanService,
+    PlanTicket,
+    StaleWhileRevalidate,
+    default_service,
+)
 from .solver import BankingSolution, SolverOptions, solve
+from .store import DirectoryStore, MemoryStore, PlanStore
+from .grouping import build_groups
 
 __all__ = [
     "Access", "AccessDecl", "AccessGroup", "Affine", "BankingLayout",
-    "BankingPlan", "BankingPlanner", "BankingReport", "BankingSolution",
-    "CompiledBankingPlan", "Counter", "Ctrl", "FlatGeometry", "Iterator",
-    "MemorySpec", "MultiDimGeometry", "PlanRequest", "Program", "Sched",
-    "SolverOptions", "Unroll", "as_compiled", "build_groups",
+    "BankingPlan", "BankingPlanner", "BankingSolution",
+    "CompiledBankingPlan", "Counter", "Ctrl", "DirectoryStore",
+    "FlatGeometry", "Iterator", "MemorySpec", "MemoryStore",
+    "MultiDimGeometry", "PlanRequest", "PlanService", "PlanStore",
+    "PlanTicket", "PreparedRequest", "Program", "Sched", "SolverOptions",
+    "StaleWhileRevalidate", "Unroll", "as_compiled", "build_groups",
     "canonical_signature", "compile_geometry", "compile_plan",
-    "compile_solution", "default_planner", "lane_compile", "partition_all",
-    "partition_memory", "program_signature", "rank_solutions",
-    "register_scorer", "registered_scorers", "resolve_scorer",
-    "set_ml_scorer_path", "solve", "unroll",
+    "compile_solution", "compile_trivial", "default_planner",
+    "default_service", "family_signature", "lane_compile",
+    "program_signature", "rank_solutions", "register_scorer",
+    "registered_scorers", "resolve_scorer", "set_ml_scorer_path", "solve",
+    "unroll",
 ]

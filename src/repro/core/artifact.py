@@ -315,6 +315,12 @@ class CompiledBankingPlan:
     def gather(self, table, rows, *, interpret: Optional[bool] = None):
         """Gather logical rows from bank-major storage.
 
+        ``rows`` is a ``(T,)`` vector of flat logical addresses -- or a
+        stacked ``(T, R)`` matrix of T row-sets (e.g. one decode tick's
+        reads for every active sequence), which issues ONE kernel launch
+        for the whole batch and returns ``(T, R, D)`` instead of T
+        per-row-set calls.
+
         ``jax`` backend: binds the Pallas banked-gather kernel -- the
         compiled BA/BO arithmetic runs in the scalar-prefetch index map,
         exactly where an FPGA would place the resolution circuit.
@@ -322,6 +328,8 @@ class CompiledBankingPlan:
         compiled (numpy-lowered) resolution callables.
         """
         if self.backend == "numpy":
+            # resolution callables are shape-preserving: (T,) and (T, R)
+            # index arrays both work through one advanced-indexing gather
             ba, bo = self.resolve(np.asarray(rows, dtype=np.int64))
             return np.asarray(table)[ba, bo]
         from ..kernels.banked_gather import banked_gather
@@ -336,6 +344,15 @@ class CompiledBankingPlan:
         def bo_fn(addr):
             return self.bo(*self._split(addr))
 
+        import jax.numpy as jnp
+        rows = jnp.asarray(rows)
+        if rows.ndim == 2:
+            # stacked row-sets: flatten into a single grid so the whole
+            # batch is one pallas_call, then restore the (T, R) structure
+            T, R = rows.shape
+            flat = banked_gather(table, rows.reshape(T * R), ba_fn, bo_fn,
+                                 interpret=interpret)
+            return flat.reshape(T, R, flat.shape[-1])
         return banked_gather(table, rows, ba_fn, bo_fn, interpret=interpret)
 
     # -- device-level banking ----------------------------------------------
@@ -553,6 +570,26 @@ def compile_geometry(mem: MemorySpec, geometry, *,
         bo_graph=bo)
 
 
+def compile_trivial(mem: MemorySpec, *, backend: str = "jax",
+                    signature: str = "") -> CompiledBankingPlan:
+    """The zero-solve fallback artifact: one bank, row-major offsets.
+
+    ``FlatGeometry(N=1, B=1)`` with a unit parallelotope places every
+    logical row at ``(bank 0, offset = flat address)`` -- always valid
+    (it just serializes concurrent accesses), needs no solver or search,
+    and compiles in microseconds.  ``PlanTicket.fallback()`` hands this
+    out so a consumer can pack/gather *immediately* and hot-swap to the
+    solved artifact when the ticket resolves.
+    """
+    nd = len(mem.dims)
+    alpha = tuple(1 if i == 0 else 0 for i in range(nd))
+    geo = FlatGeometry(N=1, B=1, alpha=alpha, P=(1,) * nd)
+    art = compile_geometry(mem, geo, P=(1,) * nd, backend=backend,
+                           signature=signature)
+    art.note = "trivial single-bank fallback"
+    return art
+
+
 def lane_compile(plan, lanes: int, *, backend: str = "jax"
                  ) -> Optional[CompiledBankingPlan]:
     """Compile the first candidate suitable for device-lane banking.
@@ -600,6 +637,7 @@ __all__ = [
     "compile_geometry",
     "compile_plan",
     "compile_solution",
+    "compile_trivial",
     "graph_from_json",
     "graph_to_json",
     "lane_compile",

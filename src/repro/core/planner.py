@@ -1,6 +1,6 @@
 """Plan-oriented front door for the banking system.
 
-The free functions of ``core.api`` re-ran the full
+The original free-function API re-ran the full
 unroll -> group -> solve -> rank pipeline on every call -- including in the
 serving hot path, where every decode tick poses the *same* KV-pool banking
 problem.  This module makes memory configuration a reusable, durable
@@ -22,8 +22,12 @@ artifact instead of an inline computation:
 * ``BankingPlanner.plan_all`` solves independent memories concurrently on
   a thread pool with a per-memory timeout.
 
-``core.api.partition_memory`` / ``partition_all`` remain as thin deprecated
-shims over a process-wide default planner.
+Since the service redesign, ``BankingPlanner.plan`` is itself a thin
+``service.submit(...).result()`` over the planner's inline
+:class:`repro.core.service.PlanService` -- the synchronous and asynchronous
+front doors share one code path (prepare -> lookup -> solve), and
+durability is delegated to a pluggable :class:`repro.core.store.PlanStore`
+(``cache_dir=`` is sugar for a cross-process ``DirectoryStore``).
 """
 
 from __future__ import annotations
@@ -42,6 +46,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 from .artifact import CompiledBankingPlan, compile_plan
 from .controller import Program, unroll
 from .grouping import build_groups
+from .store import PlanStore, as_store
 from .polytope import AccessGroup, Affine, Iterator, MemorySpec
 from .resources import ResourceEstimate, SchemeResources
 from .solver import (
@@ -263,6 +268,22 @@ def _iterators_payload(groups: List[AccessGroup],
     ]
 
 
+def _problem_payload(mem: MemorySpec, groups: List[AccessGroup],
+                     iters: Dict[str, Iterator]) -> dict:
+    return {
+        "v": SIGNATURE_VERSION,
+        "memory": [list(mem.dims), mem.word_bits, mem.ports],
+        "groups": _groups_payload(groups),
+        "iterators": _iterators_payload(groups, iters),
+    }
+
+
+def _hash_payload(prefix: str, payload: dict) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"),
+                      default=list)
+    return prefix + hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
 def canonical_signature(mem: MemorySpec, groups: List[AccessGroup],
                         iters: Dict[str, Iterator],
                         opts: SolverOptions) -> str:
@@ -274,16 +295,20 @@ def canonical_signature(mem: MemorySpec, groups: List[AccessGroup],
     and the solver options -- so structurally identical programs collide by
     construction.
     """
-    payload = {
-        "v": SIGNATURE_VERSION,
-        "memory": [list(mem.dims), mem.word_bits, mem.ports],
-        "groups": _groups_payload(groups),
-        "iterators": _iterators_payload(groups, iters),
-        "opts": asdict(opts),
-    }
-    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"),
-                      default=list)
-    return "bp1-" + hashlib.sha256(blob.encode()).hexdigest()[:32]
+    payload = _problem_payload(mem, groups, iters)
+    payload["opts"] = asdict(opts)
+    return _hash_payload("bp1-", payload)
+
+
+def family_signature(mem: MemorySpec, groups: List[AccessGroup],
+                     iters: Dict[str, Iterator]) -> str:
+    """Signature of the problem *family*: the access structure without the
+    solver options.  Two submits whose canonical signatures differ only in
+    options share a family -- any member's scheme is a valid (if possibly
+    suboptimal) scheme for the others, which is what lets the service's
+    stale-while-revalidate policy answer from a stored near-match while
+    the exact solve runs in the background."""
+    return _hash_payload("bf1-", _problem_payload(mem, groups, iters))
 
 
 def program_signature(program: Program, memory: str,
@@ -332,6 +357,7 @@ class BankingPlan:
     solutions: List[BankingSolution] = field(default_factory=list)
     groups: List[AccessGroup] = field(default_factory=list)
     error: str = ""
+    family: str = ""         # options-free problem-family signature
 
     # -- compilation ---------------------------------------------------------
     def compile(self, backend: str = "jax") -> "CompiledBankingPlan":
@@ -346,22 +372,20 @@ class BankingPlan:
             return owner.compile(self, backend=backend)
         return compile_plan(self, backend=backend)
 
-    # -- report compatibility ------------------------------------------------
-    def to_report(self):
-        """Legacy ``BankingReport`` view (deprecated shims, tables)."""
-        from .api import BankingReport
-
-        return BankingReport(
-            memory=self.memory,
-            groups=self.groups,
-            solutions=self.solutions or ([self.best] if self.best else []),
-            best=self.best,
-            solve_seconds=self.solve_seconds,
-            num_candidates=self.num_candidates,
-        )
-
+    # -- tabulation ------------------------------------------------------------
     def table_row(self) -> Dict[str, float]:
-        return self.to_report().table_row()
+        """One benchmark-table row for the chosen scheme."""
+        b = self.best
+        r = b.resources.total if b is not None and b.resources else None
+        return {
+            "memory": self.memory,
+            "lut": r.lut if r else float("nan"),
+            "ff": r.ff if r else float("nan"),
+            "bram": r.bram if r else 0,
+            "dsp": r.dsp if r else 0,
+            "banks": b.num_banks if b else 0,
+            "seconds": self.solve_seconds,
+        }
 
     # -- serialization -------------------------------------------------------
     def to_json(self) -> dict:
@@ -377,6 +401,7 @@ class BankingPlan:
             "opts": asdict(self.opts),
             "best": _solution_to_json(self.best) if self.best else None,
             "error": self.error,
+            "family": self.family,
         }
 
     @staticmethod
@@ -400,6 +425,7 @@ class BankingPlan:
             created_at=d.get("created_at", 0.0),
             opts=opts,
             error=d.get("error", ""),
+            family=d.get("family", ""),
         )
 
     def save(self, path) -> Path:
@@ -531,6 +557,31 @@ class PlannerStats:
     compile_disk_hits: int = 0
 
 
+@dataclass
+class PreparedRequest:
+    """A ``PlanRequest`` after the cheap synchronous half of planning:
+    unroll + grouping + signatures, ready for a cache probe or a solve.
+
+    ``PlanService.submit`` runs this part inline (so tickets carry real
+    signatures and errors surface synchronously) and hands the prepared
+    request to a worker for the expensive half.
+    """
+
+    request: PlanRequest
+    mem: MemorySpec
+    groups: List[AccessGroup]
+    iterators: Dict[str, Iterator]
+    opts: SolverOptions
+    scorer_spec: ScorerLike
+    scorer_name: str
+    signature: str
+    family: str
+
+    @property
+    def memory(self) -> str:
+        return self.request.memory
+
+
 class BankingPlanner:
     """Plan-oriented entry point: signature-keyed cache over the solver.
 
@@ -538,18 +589,29 @@ class BankingPlanner:
     ----------
     opts : default ``SolverOptions`` for requests that don't carry their own
     scorer : default scorer spec (registry name or callable)
-    cache_dir : optional directory of ``<signature>.json`` plans; solved
-        plans are persisted there and misses consult it before solving
-    max_workers : thread-pool width for ``plan_all``
+    cache_dir : sugar for ``store=DirectoryStore(cache_dir)`` -- the legacy
+        directory-of-JSON-plans layout, now shareable across processes
+    store : a ``PlanStore`` consulted on in-memory misses; solved plans and
+        compiled artifacts are persisted there
+    max_workers : thread-pool width for ``plan_all`` and the inline service
     """
 
     def __init__(self, *, opts: Optional[SolverOptions] = None,
                  scorer: ScorerLike = "proxy",
                  cache_dir: Optional[Union[str, Path]] = None,
+                 store: Optional[Union[PlanStore, str, Path]] = None,
                  max_workers: Optional[int] = None):
+        from .store import DirectoryStore
+
         self.opts = opts or SolverOptions()
         self.scorer = scorer
-        self.cache_dir = Path(cache_dir) if cache_dir is not None else None
+        self.store = as_store(store)
+        if self.store is None and cache_dir is not None:
+            self.store = DirectoryStore(cache_dir)
+        # legacy attribute: the directory plans persist in, when any
+        self.cache_dir = (self.store.path
+                          if isinstance(self.store, DirectoryStore) else
+                          (Path(cache_dir) if cache_dir is not None else None))
         self.max_workers = max_workers
         self.stats = PlannerStats()
         self._cache: Dict[str, BankingPlan] = {}
@@ -559,6 +621,7 @@ class BankingPlanner:
         # (a GC'd lambda's address could otherwise be reused by a new one)
         self._scorer_pins: Dict[str, object] = {}
         self._lock = threading.Lock()
+        self._service = None
         if self.cache_dir is not None:
             # trained "ml" pipelines persist next to the plan cache.
             # First planner with a cache_dir wins: a later throwaway
@@ -568,6 +631,19 @@ class BankingPlanner:
                 global _ML_SCORER_PATH
                 if _ML_SCORER_PATH is None:
                     _ML_SCORER_PATH = self.cache_dir / "ml_scorer.json"
+
+    # -- the inline service ----------------------------------------------------
+    @property
+    def service(self):
+        """The planner's inline :class:`PlanService` -- ``plan()`` is a
+        thin ``service.submit(...).result()`` so the blocking and async
+        front doors share one prepare -> lookup -> solve code path."""
+        if self._service is None:
+            from .service import PlanService
+            # constructing a service claims the planner's slot under the
+            # planner lock (first one wins; a racing loser is discarded)
+            PlanService(planner=self, workers=self.max_workers or 8)
+        return self._service
 
     # -- cache plumbing ------------------------------------------------------
     def _cache_key(self, signature: str, scorer_name: str) -> str:
@@ -591,45 +667,44 @@ class BankingPlanner:
         out.groups = list(hit.groups)
         return self._adopt(out)
 
-    def _disk_path(self, signature: str, scorer_name: str) -> Optional[Path]:
-        if self.cache_dir is None:
-            return None
-        safe = scorer_name.replace(":", "_").replace("/", "_")
-        return self.cache_dir / f"{signature}.{safe}.json"
-
-    def _compiled_disk_path(self, signature: str, scorer_name: str,
-                            backend: str) -> Optional[Path]:
-        if self.cache_dir is None:
-            return None
-        safe = scorer_name.replace(":", "_").replace("/", "_")
-        return self.cache_dir / f"{signature}.{safe}.{backend}.compiled.json"
-
-    def warm_start(self, path: Union[str, Path]) -> int:
-        """Preload plans -- and their compiled artifacts -- from a directory
-        (or a single JSON file) into the in-memory caches.  Returns the
-        number of plans + artifacts loaded; a warm-started planner skips
-        both re-solving and re-lowering."""
-        path = Path(path)
-        files = sorted(path.glob("*.json")) if path.is_dir() else [path]
-        n = 0
-        for f in files:
-            if f.name.endswith(".compiled.json"):
+    def warm_start(self, source: Union[str, Path, PlanStore]) -> int:
+        """Preload plans -- and their compiled artifacts -- from a store,
+        a directory, or a single JSON file into the in-memory caches.
+        Returns the number of plans + artifacts loaded; a warm-started
+        planner skips both re-solving and re-lowering."""
+        if not isinstance(source, PlanStore):
+            path = Path(source)
+            if not path.is_dir():
+                if path.name.endswith(".compiled.json"):
+                    try:
+                        art = CompiledBankingPlan.load(path)
+                    except (ValueError, KeyError, json.JSONDecodeError,
+                            OSError):
+                        return 0
+                    with self._lock:
+                        self._compiled[self._compile_key(
+                            art.signature, art.scorer_name,
+                            art.backend)] = art
+                    return 1
                 try:
-                    art = CompiledBankingPlan.load(f)
+                    plan = BankingPlan.load(path)
                 except (ValueError, KeyError, json.JSONDecodeError, OSError):
-                    continue
+                    return 0
                 with self._lock:
-                    self._compiled[self._compile_key(
-                        art.signature, art.scorer_name, art.backend)] = art
-                n += 1
-                continue
-            try:
-                plan = BankingPlan.load(f)
-            except (ValueError, KeyError, json.JSONDecodeError, OSError):
-                continue
+                    self._cache[self._cache_key(plan.signature,
+                                                plan.scorer_name)] = plan
+                return 1
+            source = as_store(path)
+        n = 0
+        for plan in source.plans():
             with self._lock:
                 self._cache[self._cache_key(plan.signature,
                                             plan.scorer_name)] = plan
+            n += 1
+        for art in source.artifacts():
+            with self._lock:
+                self._compiled[self._compile_key(
+                    art.signature, art.scorer_name, art.backend)] = art
             n += 1
         return n
 
@@ -650,24 +725,20 @@ class BankingPlanner:
         cache.
 
         Artifacts are keyed by (plan signature, scorer, backend) and
-        persist as ``<sig>.<scorer>.<backend>.compiled.json`` alongside the
-        JSON plan cache, so a warm-started planner skips re-lowering the
-        resolution circuits as well as re-solving."""
+        persist in the plan store (for a ``DirectoryStore``, as
+        ``<sig>.<scorer>.<backend>.compiled.json`` beside the JSON plans),
+        so a warm-started planner skips re-lowering the resolution
+        circuits as well as re-solving."""
         key = self._compile_key(plan.signature, plan.scorer_name, backend)
         with self._lock:
             hit = self._compiled.get(key)
         if hit is not None:
             self.stats.compile_hits += 1
             return hit
-        disk = self._compiled_disk_path(plan.signature, plan.scorer_name,
-                                        backend)
-        if disk is not None and disk.exists():
-            try:
-                art = CompiledBankingPlan.load(disk)
-            except (ValueError, KeyError, TypeError, json.JSONDecodeError,
-                    OSError):
-                pass  # damaged/unreadable artifact: re-lower below
-            else:
+        if self.store is not None:
+            art = self.store.get_artifact(plan.signature, plan.scorer_name,
+                                          backend)
+            if art is not None:
                 with self._lock:
                     self._compiled[key] = art
                 self.stats.compile_disk_hits += 1
@@ -677,8 +748,8 @@ class BankingPlanner:
         self.stats.compiles += 1
         with self._lock:
             self._compiled[key] = art
-        if disk is not None:
-            art.save(disk)
+        if self.store is not None:
+            self.store.put_artifact(art)
         return art
 
     # -- planning ------------------------------------------------------------
@@ -686,12 +757,15 @@ class BankingPlanner:
                   opts: Optional[SolverOptions] = None) -> str:
         return program_signature(program, memory, opts or self.opts)
 
-    def plan(self, request: Union[PlanRequest, Program],
-             memory: Optional[str] = None, *,
-             opts: Optional[SolverOptions] = None,
-             scorer: ScorerLike = None,
-             use_cache: bool = True) -> BankingPlan:
-        """Plan one memory: cache hit or unroll->group->solve->rank."""
+    def prepare(self, request: Union[PlanRequest, Program],
+                memory: Optional[str] = None, *,
+                opts: Optional[SolverOptions] = None,
+                scorer: ScorerLike = None,
+                use_cache: bool = True) -> PreparedRequest:
+        """The cheap synchronous half of planning: normalize the request,
+        unroll + group the program, and compute signatures.  Raises for
+        unknown memories and unregistered scorers -- submit-time errors
+        must surface to the caller, not inside a worker thread."""
         if isinstance(request, PlanRequest):
             req = request
         else:
@@ -706,58 +780,105 @@ class BankingPlanner:
         if callable(spec):
             with self._lock:
                 self._scorer_pins[scorer_name] = spec
-
         up = unroll(req.program)
         groups = build_groups(up, req.memory)
         mem = req.program.memories[req.memory]
-        sig = canonical_signature(mem, groups, up.iterators, opts)
-        key = self._cache_key(sig, scorer_name)
+        return PreparedRequest(
+            request=req, mem=mem, groups=groups, iterators=up.iterators,
+            opts=opts, scorer_spec=spec, scorer_name=scorer_name,
+            signature=canonical_signature(mem, groups, up.iterators, opts),
+            family=family_signature(mem, groups, up.iterators),
+        )
 
-        if req.use_cache:
-            with self._lock:
-                hit = self._cache.get(key)
-            if hit is not None:
-                self.stats.hits += 1
-                return self._hit_copy(hit, req.memory, "cached")
-            disk = self._disk_path(sig, scorer_name)
-            if disk is not None and disk.exists():
-                try:
-                    plan = BankingPlan.load(disk)
-                except (ValueError, KeyError, TypeError,
-                        json.JSONDecodeError, OSError):
-                    pass  # damaged/unreadable plan: fall through and re-solve
-                else:
-                    with self._lock:
-                        self._cache[key] = plan
-                    self.stats.disk_hits += 1
-                    return self._hit_copy(plan, req.memory, "cached-disk")
+    def lookup(self, prep: PreparedRequest) -> Optional[BankingPlan]:
+        """Cache probe for a prepared request: the in-memory cache first,
+        then the plan store.  Returns a relabeled hit copy or ``None``."""
+        key = self._cache_key(prep.signature, prep.scorer_name)
+        with self._lock:
+            hit = self._cache.get(key)
+        if hit is not None:
+            self.stats.hits += 1
+            return self._hit_copy(hit, prep.memory, "cached")
+        if self.store is not None:
+            plan = self.store.get(prep.signature, prep.scorer_name)
+            if plan is not None:
+                with self._lock:
+                    self._cache[key] = plan
+                self.stats.disk_hits += 1
+                return self._hit_copy(plan, prep.memory, "cached-disk")
+        return None
 
+    def solve_prepared(self, prep: PreparedRequest) -> BankingPlan:
+        """The expensive half: solve, rank, cache, persist.  This is the
+        single solver entry point -- service workers and the blocking
+        ``plan()`` both end here."""
         self.stats.misses += 1
-        _, scorer_fn = resolve_scorer(spec)
+        _, scorer_fn = resolve_scorer(prep.scorer_spec)
         t0 = time.perf_counter()
-        sols = solve(mem, groups, up.iterators, opts)
+        sols = solve(prep.mem, prep.groups, prep.iterators, prep.opts)
         self.stats.solves += 1
         ranked = rank_solutions(sols, scorer_fn)
         dt = time.perf_counter() - t0
         plan = BankingPlan(
-            memory=req.memory,
-            signature=sig,
+            memory=prep.memory,
+            signature=prep.signature,
             best=ranked[0] if ranked else None,
             solve_seconds=dt,
             num_candidates=len(sols),
-            scorer_name=scorer_name,
+            scorer_name=prep.scorer_name,
             status="solved",
             created_at=time.time(),
-            opts=opts,
+            opts=prep.opts,
             solutions=ranked,
-            groups=groups,
+            groups=prep.groups,
+            family=prep.family,
         )
         with self._lock:
-            self._cache[key] = plan
-        disk = self._disk_path(sig, scorer_name)
-        if disk is not None:
-            plan.save(disk)
+            self._cache[self._cache_key(prep.signature,
+                                        prep.scorer_name)] = plan
+        if self.store is not None:
+            self.store.put(plan)
         return self._adopt(plan)
+
+    def plan_prepared(self, prep: PreparedRequest) -> BankingPlan:
+        """lookup-or-solve for an already-prepared request (worker path)."""
+        if prep.request.use_cache:
+            hit = self.lookup(prep)
+            if hit is not None:
+                return hit
+        return self.solve_prepared(prep)
+
+    def find_family(self, family: str, *,
+                    exclude_signature: str = "") -> Optional[BankingPlan]:
+        """Newest known plan of the same problem family (any solver
+        options): in-memory cache first, then the store.  This is the
+        near-match feeding stale-while-revalidate submits."""
+        if not family:
+            return None
+        with self._lock:
+            cands = [p for p in self._cache.values()
+                     if p.family == family and p.best is not None
+                     and p.signature != exclude_signature]
+        if cands:
+            return max(cands, key=lambda p: p.created_at)
+        if self.store is not None:
+            return self.store.find_family(
+                family, exclude_signature=exclude_signature)
+        return None
+
+    def plan(self, request: Union[PlanRequest, Program],
+             memory: Optional[str] = None, *,
+             opts: Optional[SolverOptions] = None,
+             scorer: ScorerLike = None,
+             use_cache: bool = True) -> BankingPlan:
+        """Plan one memory: cache hit or unroll->group->solve->rank.
+
+        A thin ``submit(...).result()`` over the inline service: cache
+        hits resolve synchronously inside ``submit``; misses run on the
+        service's worker pool while this thread blocks on the ticket."""
+        prep = self.prepare(request, memory, opts=opts, scorer=scorer,
+                            use_cache=use_cache)
+        return self.service.submit_prepared(prep).result()
 
     def plan_all(self, program: Program, *,
                  opts: Optional[SolverOptions] = None,
@@ -812,8 +933,8 @@ _DEFAULT_LOCK = threading.Lock()
 
 
 def default_planner() -> BankingPlanner:
-    """The shared in-memory-cached planner used by the deprecated free
-    functions, the serving hot path, and the sharding bridge."""
+    """The shared in-memory-cached planner used by the default service,
+    the serving hot path, and the sharding bridge."""
     global _DEFAULT_PLANNER
     with _DEFAULT_LOCK:
         if _DEFAULT_PLANNER is None:
@@ -827,9 +948,11 @@ __all__ = [
     "CompiledBankingPlan",
     "PlanRequest",
     "PlannerStats",
+    "PreparedRequest",
     "canonical_signature",
     "compile_plan",
     "default_planner",
+    "family_signature",
     "program_signature",
     "rank_solutions",
     "register_scorer",

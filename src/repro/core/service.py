@@ -1,0 +1,412 @@
+"""PlanService: the asynchronous front door of the banking system.
+
+The paper's pitch is that partitioning is *fast enough to sit inside a
+compiler loop* -- but "fast" still means hundreds of milliseconds for a
+cold solve, which is an eternity on a serving hot path.  Every consumer
+used to eat that cost inline by calling ``BankingPlanner.plan()``.  This
+module turns the front door into **submit -> ticket -> compile ->
+execute**:
+
+* :meth:`PlanService.submit` runs only the cheap half of planning inline
+  (unroll + grouping + signatures + cache probe) and returns a
+  :class:`PlanTicket`.  Warm caches and warm :class:`~repro.core.store`
+  stores resolve the ticket *before* it is returned -- zero solver work,
+  no thread hop.
+* Misses are queued (priority-ordered) and drained by a small daemon
+  worker pool into the shared :class:`BankingPlanner` -- one code path
+  for sync and async planning; ``BankingPlanner.plan`` is itself
+  ``service.submit_prepared(...).result()``.
+* ``ticket.fallback()`` returns an *immediately usable* compiled artifact
+  (the trivial single-bank scheme, or a stored same-family near-match)
+  so a caller can pack tables and serve traffic NOW and atomically
+  hot-swap to ``ticket.artifact()`` when the solve lands -- the pattern
+  ``runtime/server.py`` uses between decode ticks.
+* :class:`StaleWhileRevalidate`: when a submit's canonical signature
+  misses but the store holds a plan of the same problem *family* (same
+  memory + access polytopes, drifted solver options), the ticket serves
+  that near-match as its provisional artifact while the exact solve runs
+  speculatively in the background.
+
+Tickets deduplicate in-flight work: two submits of the same
+(signature, scorer) share one solve.
+"""
+
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+from .artifact import CompiledBankingPlan, compile_trivial
+from .planner import (
+    BankingPlan,
+    BankingPlanner,
+    PlanRequest,
+    PreparedRequest,
+    ScorerLike,
+    default_planner,
+)
+from .polytope import MemorySpec
+from .solver import SolverOptions
+from .store import PlanStore, as_store
+
+
+@dataclass
+class StaleWhileRevalidate:
+    """Policy for answering submits from a stored near-match.
+
+    ``enabled``: serve a same-family plan (same memory + access structure,
+    drifted solver options/scorer) as the ticket's provisional artifact
+    while the exact solve runs in the background.
+    ``max_age``: ignore near-matches older than this many seconds
+    (``None`` = any age).
+    """
+
+    enabled: bool = True
+    max_age: Optional[float] = None
+
+    def pick(self, planner: BankingPlanner,
+             prep: PreparedRequest) -> Optional[BankingPlan]:
+        if not self.enabled:
+            return None
+        plan = planner.find_family(prep.family,
+                                   exclude_signature=prep.signature)
+        if plan is None:
+            return None
+        if (self.max_age is not None
+                and time.time() - plan.created_at > self.max_age):
+            return None
+        return plan
+
+
+class PlanTicket:
+    """Future-like handle for one submitted banking problem.
+
+    States: ``queued`` -> ``solving`` -> ``done`` | ``error``; a ticket
+    answered synchronously (cache/store hit) is born ``done``; one with a
+    stale near-match attached is ``revalidating`` until its exact solve
+    lands.  ``fallback()`` always returns immediately with an executable
+    artifact -- the stored near-match when one exists, else the trivial
+    single-bank scheme -- so callers can execute *now* and hot-swap when
+    ``done()`` flips.
+    """
+
+    def __init__(self, *, service: "PlanService", prep: PreparedRequest,
+                 priority: int = 0):
+        self._service = service
+        self._prep = prep
+        self.memory = prep.memory
+        self.signature = prep.signature
+        self.family = prep.family
+        self.scorer_name = prep.scorer_name
+        self.priority = priority
+        self.submitted_at = time.time()
+        self.status = "queued"
+        self._event = threading.Event()
+        self._plan: Optional[BankingPlan] = None
+        self._error: Optional[BaseException] = None
+        self._stale: Optional[BankingPlan] = None
+        self._fallbacks: Dict[str, CompiledBankingPlan] = {}
+        self._claimed = False
+        self._lock = threading.Lock()
+
+    # -- completion ------------------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> BankingPlan:
+        """The solved plan; blocks up to ``timeout`` seconds.  Raises
+        ``TimeoutError`` on expiry and re-raises solver exceptions."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"plan {self.signature} not solved within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._plan
+
+    def artifact(self, timeout: Optional[float] = None,
+                 backend: str = "jax") -> CompiledBankingPlan:
+        """The *solved* compiled artifact (blocks like ``result``)."""
+        return self._service.planner.compile(self.result(timeout),
+                                             backend=backend)
+
+    # -- immediate execution -----------------------------------------------------
+    @property
+    def stale_plan(self) -> Optional[BankingPlan]:
+        """The same-family near-match serving as provisional answer."""
+        return self._stale
+
+    def fallback(self, backend: str = "jax") -> CompiledBankingPlan:
+        """An executable artifact available *now*, without the solver.
+
+        Prefers the already-solved plan (free once ``done()``), then the
+        stale same-family near-match, then the trivial single-bank
+        scheme.  Use it to serve immediately; hot-swap to ``artifact()``
+        when the ticket resolves.
+        """
+        if self.done() and self._error is None \
+                and self._plan is not None and self._plan.best is not None:
+            return self._service.planner.compile(self._plan, backend=backend)
+        if self._stale is not None:
+            return self._service.planner.compile(self._stale, backend=backend)
+        with self._lock:
+            art = self._fallbacks.get(backend)
+            if art is None:
+                art = self._service.trivial_artifact(self._prep.mem,
+                                                     backend=backend)
+                self._fallbacks[backend] = art
+        return art
+
+    # -- resolution (service-internal) -------------------------------------------
+    def _claim(self) -> bool:
+        """Exactly one queue entry may solve this ticket (a priority
+        upgrade re-enqueues the same ticket; later pops are no-ops)."""
+        with self._lock:
+            if self._claimed or self._event.is_set():
+                return False
+            self._claimed = True
+            self.status = "solving"
+            return True
+
+    def _resolve(self, plan: BankingPlan) -> None:
+        self._plan = plan
+        self.status = "done"
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self.status = "error"
+        self._event.set()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"<PlanTicket {self.memory} {self.signature[:16]}... "
+                f"{self.status}>")
+
+
+@dataclass
+class ServiceStats:
+    submits: int = 0
+    sync_hits: int = 0       # tickets born done (cache/store answered)
+    deduped: int = 0         # submits merged onto an in-flight ticket
+    queued: int = 0
+    solved: int = 0
+    errors: int = 0
+    revalidations: int = 0   # tickets served a stale near-match
+
+
+_SENTINEL = None
+
+
+class PlanService:
+    """submit/await planning: a priority queue of banking problems drained
+    by daemon workers into one shared :class:`BankingPlanner`.
+
+    Parameters
+    ----------
+    planner : the planner to answer through (default: a fresh one)
+    store : plan store for a fresh planner (``PlanStore`` or directory
+        path); ignored when ``planner`` is given
+    workers : worker-pool width (threads spawn lazily on first miss)
+    revalidate : the :class:`StaleWhileRevalidate` policy (pass
+        ``StaleWhileRevalidate(enabled=False)`` to disable)
+    """
+
+    def __init__(self, planner: Optional[BankingPlanner] = None, *,
+                 store: Optional[Union[PlanStore, str]] = None,
+                 workers: int = 2,
+                 revalidate: Optional[StaleWhileRevalidate] = None):
+        if planner is None:
+            planner = BankingPlanner(store=as_store(store))
+        self.planner = planner
+        # claim the planner's inline-service slot when it's free, so
+        # planner.plan() (= submit().result()) shares this queue/workers
+        with planner._lock:
+            if planner._service is None:
+                planner._service = self
+        self.revalidate = (revalidate if revalidate is not None
+                           else StaleWhileRevalidate())
+        self.stats = ServiceStats()
+        self._queue: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._seq = itertools.count()
+        self._inflight: Dict[Tuple[str, str], PlanTicket] = {}
+        self._trivial: Dict[Tuple, CompiledBankingPlan] = {}
+        self._threads = []
+        self._max_workers = max(1, int(workers))
+        self._shutdown = False
+        self._lock = threading.Lock()
+
+    # -- the front door ----------------------------------------------------------
+    def submit(self, program, memory: Optional[str] = None, *,
+               opts: Optional[SolverOptions] = None,
+               scorer: ScorerLike = None,
+               use_cache: bool = True,
+               priority: int = 0) -> PlanTicket:
+        """Pose one banking problem; returns a :class:`PlanTicket`.
+
+        Runs unroll + grouping + signature + cache probe inline (bad
+        memories / unknown scorers raise here, warm caches return a
+        ticket that is already ``done()``); cold problems are queued for
+        the worker pool.  Lower ``priority`` solves first.
+        """
+        prep = self.planner.prepare(program, memory, opts=opts,
+                                    scorer=scorer, use_cache=use_cache)
+        return self.submit_prepared(prep, priority=priority)
+
+    def submit_request(self, request: PlanRequest, *,
+                       priority: int = 0) -> PlanTicket:
+        return self.submit_prepared(self.planner.prepare(request),
+                                    priority=priority)
+
+    def submit_prepared(self, prep: PreparedRequest, *,
+                        priority: int = 0) -> PlanTicket:
+        self.stats.submits += 1
+        key = (prep.signature, prep.scorer_name)
+        if prep.request.use_cache:
+            hit = self.planner.lookup(prep)
+            if hit is not None:
+                self.stats.sync_hits += 1
+                ticket = PlanTicket(service=self, prep=prep,
+                                    priority=priority)
+                ticket._resolve(hit)
+                return ticket
+        ticket = PlanTicket(service=self, prep=prep, priority=priority)
+        if prep.request.use_cache:
+            # atomic check-and-register: concurrent submits of the same
+            # (signature, scorer) must share ONE solve
+            with self._lock:
+                inflight = self._inflight.get(key)
+                if inflight is None:
+                    self._inflight[key] = ticket
+            if inflight is not None:
+                self.stats.deduped += 1
+                if priority < inflight.priority:
+                    # urgency upgrade: re-enqueue the same ticket at the
+                    # new priority; _claim() makes later pops no-ops
+                    inflight.priority = priority
+                    self._queue.put((priority, next(self._seq),
+                                     inflight._prep, inflight))
+                return inflight
+            stale = self.revalidate.pick(self.planner, prep)
+            if stale is not None:
+                ticket._stale = stale
+                ticket.status = "revalidating"
+                self.stats.revalidations += 1
+        self.stats.queued += 1
+        self._queue.put((priority, next(self._seq), prep, ticket))
+        self._ensure_workers()
+        return ticket
+
+    # -- immediate artifacts -------------------------------------------------------
+    def trivial_artifact(self, mem: MemorySpec, *,
+                         backend: str = "jax") -> CompiledBankingPlan:
+        """Process-cached trivial single-bank artifact for ``mem``."""
+        key = (tuple(mem.dims), mem.word_bits, backend)
+        with self._lock:
+            art = self._trivial.get(key)
+        if art is not None:
+            return art
+        art = compile_trivial(mem, backend=backend)
+        with self._lock:
+            self._trivial[key] = art
+        return art
+
+    # -- worker pool ----------------------------------------------------------------
+    def _ensure_workers(self) -> None:
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("PlanService is shut down")
+            want = min(self._max_workers,
+                       max(1, self._queue.qsize()))
+            while len(self._threads) < want:
+                t = threading.Thread(
+                    target=self._worker, daemon=True,
+                    name=f"plan-service-{len(self._threads)}")
+                self._threads.append(t)
+                t.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            try:
+                if item[2] is _SENTINEL:
+                    return
+                _, _, prep, ticket = item
+                if not ticket._claim():
+                    continue   # duplicate entry (priority upgrade) or done
+                try:
+                    plan = self.planner.plan_prepared(prep)
+                except BaseException as e:  # surface through result()
+                    self.stats.errors += 1
+                    ticket._fail(e)
+                else:
+                    self.stats.solved += 1
+                    ticket._resolve(plan)
+                with self._lock:
+                    key = (prep.signature, prep.scorer_name)
+                    if self._inflight.get(key) is ticket:
+                        del self._inflight[key]
+            finally:
+                self._queue.task_done()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every queued problem has been solved (or fail the
+        wait after ``timeout`` seconds).  Returns True when drained."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while self._queue.unfinished_tasks:
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            time.sleep(0.002)
+        return True
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            threads = list(self._threads)
+        for _ in threads:
+            self._queue.put((float("inf"), next(self._seq), _SENTINEL,
+                             _SENTINEL))
+        if wait:
+            for t in threads:
+                t.join(timeout=5.0)
+
+    def __enter__(self) -> "PlanService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default service (serving hot path, sharding bridge)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_SERVICE: Optional[PlanService] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_service() -> PlanService:
+    """The shared service over :func:`default_planner` -- what the serving
+    runtime and the sharding bridge submit through."""
+    global _DEFAULT_SERVICE
+    with _DEFAULT_LOCK:
+        if _DEFAULT_SERVICE is None:
+            _DEFAULT_SERVICE = default_planner().service
+        return _DEFAULT_SERVICE
+
+
+__all__ = [
+    "PlanService",
+    "PlanTicket",
+    "ServiceStats",
+    "StaleWhileRevalidate",
+    "default_service",
+]

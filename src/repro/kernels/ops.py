@@ -48,6 +48,11 @@ def gather_banked(table, indices, compiled, *, interpret=None):
     banking artifact (``plan.compile()``); its strength-reduced resolution
     arithmetic runs in the Pallas index map (see kernels/banked_gather.py).
 
+    ``indices`` may be a flat ``(T,)`` vector or a stacked ``(T, R)``
+    matrix of row-sets (one decode tick's reads for every active
+    sequence): the batched form issues ONE ``pallas_call`` for the whole
+    tick and returns ``(T, R, D)``.
+
     Accepts a ``CompiledBankingPlan`` or a ``BankingPlan``; passing a raw
     ``BankingSolution`` still works but is deprecated."""
     interpret = _default_interpret() if interpret is None else interpret

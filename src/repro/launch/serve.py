@@ -3,6 +3,10 @@
 Runs the continuous-batching server against synthetic requests and reports
 throughput; ``--smoke`` uses the reduced config (CPU-sized).
 
+The KV-pool banking problem goes through the async PlanService front
+door: the server starts on the ticket's fallback artifact (no solver
+wait) and hot-swaps to the solved layout between decode ticks.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --requests 8 --max-batch 4
 """
@@ -22,25 +26,37 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-store", default=None,
+                    help="directory shared across serving processes; a warm "
+                         "store answers the submit before the first tick")
     args = ap.parse_args()
 
     import numpy as np
 
     from ..configs import get_arch
+    from ..core.service import PlanService
     from ..models import get_model
-    from ..runtime.server import Request, Server, page_solution
+    from ..runtime.server import Request, Server, page_ticket
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     model = get_model(cfg)
 
-    art = page_solution(cfg, max_len=args.max_len,
-                        page=min(16, args.max_len // 4),
-                        readers=args.max_batch)
-    print("KV pool banking scheme:", art.describe())
+    # submit -> ticket: model build and solver overlap; the server's first
+    # tick runs from the fallback artifact if the solve hasn't landed
+    service = (PlanService(store=args.plan_store) if args.plan_store
+               else None)
+    t_submit = time.perf_counter()
+    ticket = page_ticket(cfg, max_len=args.max_len,
+                         page=min(16, args.max_len // 4),
+                         readers=args.max_batch, service=service)
+    print(f"submitted KV-pool plan in "
+          f"{(time.perf_counter() - t_submit) * 1e3:.2f} ms "
+          f"(ticket: {ticket.status})")
     server = Server(model, max_batch=args.max_batch, max_len=args.max_len,
-                    kv_plan=art)
+                    kv_plan=ticket)
+    print("serving from:", server.pager.artifact.describe())
     print(f"page pool: {server.pager.slots} slots x "
           f"{server.pager.pages_per_slot} pages x "
           f"{server.pager.page_size} tokens")
@@ -54,6 +70,9 @@ def main():
     server.run(max_ticks=5000)
     dt = time.perf_counter() - t0
     total_tokens = args.requests * args.max_new
+    if server.swaps:
+        print(f"hot-swapped to solved layout after tick <= {server.ticks}: "
+              f"{server.pager.artifact.describe()}")
     print(f"served {args.requests} requests ({total_tokens} tokens) in "
           f"{server.ticks} ticks, {dt:.1f}s "
           f"({total_tokens/dt:.1f} tok/s on this host)")

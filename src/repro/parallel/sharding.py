@@ -12,12 +12,14 @@ no collective on the access path).  Dims that cannot bank conflict-free
 -- precisely the paper's 'many valid geometries, pick the cheap one'.
 
 The result is memoized per (role, dims, axis size) and the underlying
-banking problems go through the shared ``BankingPlanner``; the qualifying
-scheme comes back as a **compiled artifact** (``core.artifact.lane_compile``)
-whose ``to_partition_spec`` supplies the mesh-axis placement -- no geometry
-reverse-engineering here.  The same compiled artifacts drive the Pallas
-banked-gather kernel, so device-level and kernel-level banking share one
-solver *and* one lowering.
+banking problems are **submitted through the shared PlanService** (the
+same submit -> ticket front door the serving runtime uses, so lane
+problems share its plan store and in-flight dedup); the qualifying scheme
+comes back as a **compiled artifact** (``core.artifact.lane_compile``)
+whose ``to_partition_spec`` supplies the mesh-axis placement -- no
+geometry reverse-engineering here.  The same compiled artifacts drive the
+Pallas banked-gather kernel, so device-level and kernel-level banking
+share one solver *and* one lowering.
 """
 
 from __future__ import annotations
@@ -32,8 +34,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.artifact import CompiledBankingPlan, lane_compile
 from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
-from ..core.planner import default_planner
 from ..core.polytope import Affine, MemorySpec
+from ..core.service import default_service
 from ..core.solver import SolverOptions
 
 
@@ -63,7 +65,9 @@ def lane_artifact(dim_size: int, lanes: int) -> Optional[CompiledBankingPlan]:
     opts = SolverOptions(max_solutions=4, n_budget=8,
                          b_candidates=(blk, 1) if blk > 1 else (1,),
                          allow_multidim=False, allow_duplication=False)
-    plan = default_planner().plan(prog, "t", opts=opts)
+    # submit -> await through the shared service: lane problems share the
+    # serving runtime's plan store, cache, and in-flight dedup
+    plan = default_service().submit(prog, "t", opts=opts).result()
     return lane_compile(plan, lanes)
 
 

@@ -11,20 +11,27 @@ Serving structure (vLLM-style, TPU-native):
   request -- continuous batching.
 
 The cache pages are banks from the banking planner (pages = banks, page
-size = bank volume): ``page_solution()`` returns the **compiled** plan
-artifact (a ``CompiledBankingPlan``), and the page accounting
-(:class:`KVPagePool`) reads page count and page size off that artifact's
-physical layout instead of re-deriving "pages = banks" arithmetic locally
--- the scheduler and the Pallas banked-gather kernel agree on the layout
-by construction.
+size = bank volume).  Since the service redesign the server never blocks
+on the solver: ``page_ticket()`` submits the KV-pool problem to the
+:class:`~repro.core.service.PlanService` and the :class:`Server` starts
+serving immediately from the ticket's **fallback artifact** (trivial
+single-bank scheme), then atomically hot-swaps the page pool -- and the
+bank-major token-record table -- to the solved artifact between decode
+ticks once the background solve lands.
+
+Each decode tick reads its per-slot token records through **one batched
+banked gather** (a single ``pallas_call`` over a stacked ``(slots, W)``
+index matrix) instead of one kernel launch per row-set -- the compiled
+resolution arithmetic runs in the kernel's scalar-prefetch index map
+either way, so the scheduler and the gather agree on the layout by
+construction.
 """
 
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +40,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core.artifact import CompiledBankingPlan
 from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
-from ..core.planner import default_planner
+from ..core.service import PlanService, PlanTicket, default_service
 from ..core.polytope import Affine, MemorySpec
 from ..models import Model
 from ..launch import steps as steps_mod
@@ -48,32 +55,44 @@ class Request:
     done: bool = False
 
 
-def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
-                  readers: int = 8) -> CompiledBankingPlan:
-    """Compiled banking artifact for the KV pool: pages = banks.
-
-    ``readers`` concurrent decode lanes must never contend on a page.
-
-    Every decode tick poses the structurally identical KV-pool problem, so
-    this goes through the shared planner twice over: the first call solves
-    and lowers, every later call is a signature-keyed cache hit for both
-    the plan and its compiled artifact (zero solver or lowering work on
-    the serving hot path).  The returned artifact owns the physical layout
-    the pager and the banked-gather kernel share.
-    """
+def _page_program(max_len: int, page: int, readers: int) -> Program:
     mem = MemorySpec("kv_pool", dims=(max_len,), word_bits=16, ports=1)
-    prog = Program(
+    return Program(
         root=Ctrl("decode", Sched.INNER,
                   counters=[Counter("r", 0, 1, readers, par=readers),
                             Counter("j", 0, 1, page)],
                   accesses=[AccessDecl("kv_pool", (Affine.of(r=page, j=1),))]),
         memories={"kv_pool": mem},
     )
+
+
+def page_ticket(cfg: ArchConfig, max_len: int, page: int = 128,
+                readers: int = 8, *,
+                service: Optional[PlanService] = None) -> PlanTicket:
+    """Submit the KV-pool banking problem (pages = banks); returns the
+    :class:`PlanTicket` immediately.
+
+    ``readers`` concurrent decode lanes must never contend on a page.
+    The server starts on ``ticket.fallback()`` (one bank = one page, no
+    solver work) and hot-swaps to ``ticket.artifact()`` between ticks
+    when the solve lands; a warm plan store answers before the ticket is
+    even returned.
+    """
     from ..core.solver import SolverOptions
-    plan = default_planner().plan(
-        prog, "kv_pool",
+    svc = service if service is not None else default_service()
+    return svc.submit(
+        _page_program(max_len, page, readers), "kv_pool",
         opts=SolverOptions(b_candidates=(page, 1), allow_multidim=False))
-    return plan.compile()
+
+
+def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
+                  readers: int = 8) -> CompiledBankingPlan:
+    """Blocking convenience: the *solved* compiled KV-pool artifact.
+
+    ``page_ticket(...).artifact()`` -- tools and tests that want the final
+    layout synchronously; the serving path itself uses the ticket.
+    """
+    return page_ticket(cfg, max_len, page=page, readers=readers).artifact()
 
 
 class KVPagePool:
@@ -85,14 +104,26 @@ class KVPagePool:
     decode cache is a dense per-slot region, so every slot owns its own
     ``n_banks`` pages: admission succeeds iff the request's token budget
     fits one slot's pages.  Pages release when the sequence finishes.
+
+    ``swap(artifact)`` re-derives the page geometry -- and every live
+    slot's page count -- from a new artifact's layout, which is how the
+    server promotes the fallback layout to the solved one mid-flight.
     """
 
     def __init__(self, artifact: CompiledBankingPlan, slots: int = 1):
+        self.slots = slots
+        self.owned: Dict[int, int] = {}    # slot -> allocated pages
+        self.tokens: Dict[int, int] = {}   # slot -> admitted token budget
+        self.swap(artifact)
+
+    def swap(self, artifact: CompiledBankingPlan) -> None:
+        """Adopt a new artifact's layout; re-page live allocations."""
+        self.artifact = artifact
         self.layout = artifact.layout
         self.page_size = int(self.layout.bank_volume)
         self.pages_per_slot = int(self.layout.n_banks)
-        self.slots = slots
-        self.owned: Dict[int, int] = {}   # slot -> allocated pages
+        self.owned = {slot: min(self.pages_for(tok), self.pages_per_slot)
+                      for slot, tok in self.tokens.items()}
 
     @property
     def total_pages(self) -> int:
@@ -114,15 +145,27 @@ class KVPagePool:
         if need > self.pages_per_slot or slot in self.owned:
             return False
         self.owned[slot] = need
+        self.tokens[slot] = int(n_tokens)
         return True
 
     def release(self, slot: int) -> None:
         self.owned.pop(slot, None)
+        self.tokens.pop(slot, None)
 
 
 class Server:
+    """Continuous-batching decode server.
+
+    ``kv_plan`` may be a solved ``CompiledBankingPlan`` (legacy) or a
+    ``PlanTicket``: with a ticket the server builds its page pool and
+    token-record table from ``ticket.fallback()`` -- serving its first
+    tick without waiting on the solver -- and atomically swaps in the
+    solved artifact between ticks once ``ticket.done()``.
+    """
+
     def __init__(self, model: Model, max_batch: int = 4, max_len: int = 128,
-                 kv_plan: Optional[CompiledBankingPlan] = None):
+                 kv_plan: Optional[Union[CompiledBankingPlan,
+                                         PlanTicket]] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_batch = max_batch
@@ -132,11 +175,102 @@ class Server:
         self._decode = jax.jit(steps_mod.make_serve_step(model))
         self._params = model.init(jax.random.PRNGKey(0))
         self.cache = model.init_cache(max_batch, max_len)
-        self.pager = (KVPagePool(kv_plan, slots=max_batch)
-                      if kv_plan is not None else None)
+        self._kv_ticket: Optional[PlanTicket] = None
+        art: Optional[CompiledBankingPlan] = None
+        if isinstance(kv_plan, PlanTicket):
+            # serve NOW: solved artifact when already done, else fallback.
+            # Only drop the ticket once its solved artifact was actually
+            # adopted -- a solve landing (or failing) between these calls
+            # must still hot-swap (or keep serving the fallback) later.
+            self._kv_ticket = kv_plan
+            if kv_plan.done():
+                try:
+                    art = kv_plan.artifact()
+                    self._kv_ticket = None
+                except Exception:
+                    art = None   # solve failed: fall back, like mid-serve
+            if art is None:
+                art = kv_plan.fallback()
+        elif kv_plan is not None:
+            art = kv_plan
+        self.pager = (KVPagePool(art, slots=max_batch)
+                      if art is not None else None)
+        self.kv_records = None    # bank-major (banks, vol, max_batch) int32
+        self._gather_window = min(4, max_len)
+        if art is not None:
+            self._adopt_kv_artifact(art, records=None)
+        self.swaps = 0
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
-        self.positions = np.zeros(max_batch, np.int64)
+        self.positions = np.zeros(max_batch, np.int64)  # next record slot
         self.ticks = 0
+
+    # -- banked token records ----------------------------------------------------
+    def _adopt_kv_artifact(self, art: CompiledBankingPlan,
+                           records) -> None:
+        """(Re)build the bank-major record table + resolve tables for a
+        (new) artifact; ``records`` carries logical rows across a swap."""
+        self._kv_art = art
+        if records is None:
+            records = jnp.zeros((self.max_len, self.max_batch), jnp.int32)
+        self.kv_records = art.pack(records)
+        ba, bo = art.resolve(np.arange(self.max_len, dtype=np.int64))
+        self._kv_ba = np.broadcast_to(np.asarray(ba), (self.max_len,))
+        self._kv_bo = np.broadcast_to(np.asarray(bo), (self.max_len,))
+
+    def _record(self, slot: int, tok: int) -> None:
+        """Write one token record at the slot's next position -- placed by
+        the artifact's resolution circuit (same layout the gather reads)."""
+        pos = int(self.positions[slot])
+        if self.kv_records is not None and pos < self.max_len:
+            self.kv_records = self.kv_records.at[
+                int(self._kv_ba[pos]), int(self._kv_bo[pos]), slot].set(tok)
+        self.positions[slot] = pos + 1
+
+    def _gather_next_tokens(self) -> Dict[int, int]:
+        """Each active slot's decode input, via ONE batched banked gather.
+
+        Stacks every active slot's trailing ``W`` record positions into a
+        ``(slots, W)`` index matrix -- a single ``pallas_call`` resolves
+        all of them through the compiled BA/BO circuit.  The last column
+        is the most recent record: the next decode input.
+        """
+        slots = sorted(self.active)
+        W = self._gather_window
+        rows = np.zeros((len(slots), W), np.int32)
+        for i, s in enumerate(slots):
+            pos = min(int(self.positions[s]), self.max_len)
+            rows[i] = np.clip(np.arange(pos - W, pos), 0, self.max_len - 1)
+        got = self._kv_art.gather(self.kv_records, jnp.asarray(rows))
+        got = np.asarray(got)                      # (slots, W, max_batch)
+        out = {}
+        for i, s in enumerate(slots):
+            if int(self.positions[s]) <= self.max_len:
+                out[s] = int(got[i, -1, s])
+            else:  # records past max_len aren't stored; fall back
+                out[s] = getattr(self.active[s], "_next", 1)
+        return out
+
+    # -- hot swap -----------------------------------------------------------------
+    def _maybe_swap_kv(self) -> None:
+        """Between ticks: promote the fallback layout to the solved one.
+
+        Atomic from the decode loop's point of view -- the record table is
+        unpacked from the old layout and repacked into the new one, the
+        pager re-pages live slots, and the next tick's gather runs the
+        solved resolution circuit over identical logical records.
+        """
+        t = self._kv_ticket
+        if t is None or not t.done():
+            return
+        self._kv_ticket = None
+        try:
+            art = t.artifact()
+        except Exception:
+            return  # solve failed: keep serving from the fallback layout
+        flat = self._kv_art.unpack(self.kv_records)   # logical rows survive
+        self._adopt_kv_artifact(art, records=flat)
+        self.pager.swap(art)
+        self.swaps += 1
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request):
@@ -156,6 +290,7 @@ class Server:
                     continue
                 self.pager.try_alloc(slot, need_tokens)
             self.queue.popleft()
+            self.positions[slot] = 0
             # per-request prefill: run the prompt through decode one token at
             # a time into this slot (batch=1 prefill folded into the shared
             # cache; a production server runs a separate prefill graph)
@@ -164,17 +299,25 @@ class Server:
                 self.tokens = self.tokens.at[slot, 0].set(int(t))
                 nxt, _, self.cache = self._decode(
                     self._params, self.cache, self.tokens)
-            req._next = int(np.asarray(nxt)[slot, 0])
+                self._record(slot, int(t))
+            nxt_tok = int(np.asarray(nxt)[slot, 0])
+            req._next = nxt_tok
+            self._record(slot, nxt_tok)   # the next tick's decode input
             self.active[slot] = req
 
     # -- decode tick -------------------------------------------------------------
     def tick(self):
+        self._maybe_swap_kv()
         self._admit()
         if not self.active:
             return
-        for slot, req in self.active.items():
-            self.tokens = self.tokens.at[slot, 0].set(
-                getattr(req, "_next", 1))
+        if self.kv_records is not None:
+            nxt_in = self._gather_next_tokens()   # one batched banked gather
+        else:
+            nxt_in = {s: getattr(r, "_next", 1)
+                      for s, r in self.active.items()}
+        for slot in self.active:
+            self.tokens = self.tokens.at[slot, 0].set(nxt_in[slot])
         nxt, _, self.cache = self._decode(self._params, self.cache,
                                           self.tokens)
         nxt = np.asarray(nxt)
@@ -183,6 +326,7 @@ class Server:
             tok = int(nxt[slot, 0])
             req.out.append(tok)
             req._next = tok
+            self._record(slot, tok)
             if len(req.out) >= req.max_new:
                 req.done = True
                 finished.append(slot)

@@ -1,14 +1,13 @@
 """Planner subsystem: signature cache, JSON durability, scorer registry."""
 
 import json
-import warnings
 
 import numpy as np
 import pytest
 
 from repro.core import (AccessDecl, BankingPlan, BankingPlanner, Counter,
                         Ctrl, MemorySpec, PlanRequest, Program, Sched,
-                        SolverOptions, partition_memory, program_signature,
+                        SolverOptions, program_signature,
                         register_scorer, resolve_scorer)
 from repro.core import planner as planner_mod
 from repro.core.polytope import Affine
@@ -321,16 +320,46 @@ def test_planner_cache_dir_points_ml_scorer_next_to_plans(
 
 
 # ---------------------------------------------------------------------------
-# Deprecated shims
+# One shared code path: plan() == submit().result()
 # ---------------------------------------------------------------------------
 
 
-def test_free_function_shim_warns_and_matches_planner():
+def test_plan_is_thin_submit_result(solve_counter):
+    """The blocking front door routes through the inline service."""
+    planner = BankingPlanner()
     prog = _reader_program(stride=3, count=16, par=4)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        rep = partition_memory(prog, "table")
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    plan = BankingPlanner().plan(prog, "table")
-    assert rep.best.geometry == plan.best.geometry
-    assert rep.table_row()["banks"] == plan.table_row()["banks"]
+    plan = planner.plan(prog, "table")
+    assert plan.status == "solved" and len(solve_counter) == 1
+    svc = planner.service
+    assert svc.planner is planner
+    # a submit for the same problem is answered from the plan() solve
+    ticket = svc.submit(prog, "table")
+    assert ticket.done() and len(solve_counter) == 1
+    assert ticket.result().best.geometry == plan.best.geometry
+    assert svc.stats.sync_hits >= 1
+
+
+def test_legacy_free_functions_are_gone():
+    import repro.core as core
+    assert not hasattr(core, "partition_memory")
+    assert not hasattr(core, "partition_all")
+    assert not hasattr(core, "BankingReport")
+
+
+def test_table_row_reads_off_plan():
+    plan = BankingPlanner().plan(_reader_program(), "table")
+    row = plan.table_row()
+    assert row["banks"] == plan.best.num_banks
+    assert row["seconds"] == plan.solve_seconds
+    assert row["lut"] == pytest.approx(plan.best.resources.total.lut)
+
+
+def test_family_signature_ignores_solver_options():
+    prog = _reader_program()
+    planner = BankingPlanner()
+    a = planner.plan(prog, "table", opts=SolverOptions(n_budget=8))
+    b = planner.plan(prog, "table", opts=SolverOptions(n_budget=16))
+    assert a.signature != b.signature      # options key the exact cache
+    assert a.family == b.family            # ...but share a family
+    c = planner.plan(_reader_program(stride=2), "table")
+    assert c.family != a.family            # different polytopes differ

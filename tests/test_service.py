@@ -1,0 +1,352 @@
+"""PlanService front door: submit -> ticket -> compile -> execute, warm
+stores answering before the ticket returns, fallback-first serving with
+hot-swap, stale-while-revalidate, priority, dedup, error propagation."""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (AccessDecl, BankingPlanner, Counter, Ctrl,
+                        MemorySpec, PlanService, Program, Sched,
+                        SolverOptions, StaleWhileRevalidate)
+from repro.core import planner as planner_mod
+from repro.core.polytope import Affine
+from repro.core.store import DirectoryStore
+
+
+def _reader_program(stride=1, count=32, par=8, dims=(256,), name="table"):
+    mem = MemorySpec(name, dims=dims, word_bits=32, ports=1)
+    return Program(
+        root=Ctrl("reader", Sched.INNER,
+                  counters=[Counter("i", 0, 1, count, par=par)],
+                  accesses=[AccessDecl(name, (Affine.of(i=stride),))]),
+        memories={name: mem},
+    )
+
+
+@pytest.fixture
+def solve_counter(monkeypatch):
+    calls = []
+    real = planner_mod.solve
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(planner_mod, "solve", counting)
+    return calls
+
+
+@pytest.fixture
+def solve_gate(monkeypatch):
+    """Blocks the FIRST solver call until .set(); records memory names."""
+    gate = threading.Event()
+    order = []
+    real = planner_mod.solve
+
+    def gated(mem, *a, **kw):
+        order.append(mem.name)
+        if len(order) == 1:
+            gate.wait(30)
+        return real(mem, *a, **kw)
+
+    monkeypatch.setattr(planner_mod, "solve", gated)
+    gate.order = order
+    yield gate
+    gate.set()   # never leave a worker blocked past the test
+
+
+# ---------------------------------------------------------------------------
+# Ticket lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_submit_returns_ticket_and_fallback_before_solve(solve_gate):
+    svc = PlanService(workers=1)
+    ticket = svc.submit(_reader_program(), "table")
+    assert not ticket.done() and ticket.status in ("queued", "solving")
+    # fallback is available immediately: trivial single-bank scheme
+    fb = ticket.fallback(backend="numpy")
+    assert fb.n_banks == 1 and fb.layout.logical_size == 256
+    flat = np.arange(256 * 4, dtype=np.float32).reshape(256, 4)
+    got = fb.gather(fb.pack(flat), np.asarray([0, 5, 255]))
+    np.testing.assert_array_equal(got, flat[[0, 5, 255]])
+    solve_gate.set()
+    plan = ticket.result(timeout=30)
+    assert plan.status == "solved" and ticket.done()
+    art = ticket.artifact(backend="numpy")
+    assert art.n_banks == plan.best.num_banks
+    # solved ticket's fallback IS the solved artifact now
+    assert ticket.fallback(backend="numpy").n_banks == art.n_banks
+
+
+def test_result_timeout_raises(solve_gate):
+    svc = PlanService(workers=1)
+    ticket = svc.submit(_reader_program(), "table")
+    with pytest.raises(TimeoutError):
+        ticket.result(timeout=0.05)
+    solve_gate.set()
+    assert ticket.result(timeout=30).best is not None
+
+
+def test_submit_time_errors_raise_synchronously():
+    svc = PlanService(workers=1)
+    with pytest.raises(KeyError):
+        svc.submit(_reader_program(), "no_such_memory")
+    with pytest.raises(ValueError, match="unknown scorer"):
+        svc.submit(_reader_program(), "table", scorer="nope")
+
+
+def test_worker_errors_propagate_through_result(monkeypatch):
+    def boom(*a, **kw):
+        raise RuntimeError("solver exploded")
+
+    monkeypatch.setattr(planner_mod, "solve", boom)
+    svc = PlanService(workers=1)
+    ticket = svc.submit(_reader_program(), "table")
+    with pytest.raises(RuntimeError, match="solver exploded"):
+        ticket.result(timeout=30)
+    assert ticket.status == "error" and svc.stats.errors == 1
+    # the fallback still serves even though the solve failed
+    assert ticket.fallback(backend="numpy").n_banks == 1
+
+
+def test_inflight_submits_share_one_ticket(solve_gate):
+    svc = PlanService(workers=1)
+    t1 = svc.submit(_reader_program(), "table")
+    t2 = svc.submit(_reader_program(), "table")   # same signature, in flight
+    assert t2 is t1 and svc.stats.deduped == 1
+    solve_gate.set()
+    t1.result(timeout=30)
+    assert len(solve_gate.order) == 1             # ONE solve for both
+    # after completion, a resubmit is a sync cache hit, not the old ticket
+    t3 = svc.submit(_reader_program(), "table")
+    assert t3 is not t1 and t3.done()
+
+
+def test_priority_orders_the_queue(solve_gate):
+    svc = PlanService(workers=1)
+    svc.submit(_reader_program(name="first"), "first")       # occupies worker
+    svc.submit(_reader_program(stride=2, name="low"), "low", priority=5)
+    svc.submit(_reader_program(stride=3, name="high"), "high", priority=0)
+    solve_gate.set()
+    assert svc.drain(timeout=30)
+    assert solve_gate.order == ["first", "high", "low"]
+
+
+def test_dedup_upgrades_priority(solve_gate):
+    """A hotter resubmit of an in-flight problem pulls it forward in the
+    queue (the stale lower-priority entry becomes a no-op)."""
+    svc = PlanService(workers=1)
+    svc.submit(_reader_program(name="first"), "first")       # occupies worker
+    a1 = svc.submit(_reader_program(stride=2, name="a"), "a", priority=5)
+    svc.submit(_reader_program(stride=3, name="b"), "b", priority=2)
+    a2 = svc.submit(_reader_program(stride=2, name="a"), "a", priority=0)
+    assert a2 is a1 and a1.priority == 0 and svc.stats.deduped == 1
+    solve_gate.set()
+    assert svc.drain(timeout=30)
+    assert solve_gate.order == ["first", "a", "b"]   # a jumped ahead of b
+
+
+# ---------------------------------------------------------------------------
+# Warm stores: tickets born done
+# ---------------------------------------------------------------------------
+
+
+def test_warm_directory_store_returns_done_ticket(tmp_path, solve_counter):
+    """ISSUE acceptance: a warm DirectoryStore makes submit() return an
+    already-done ticket -- zero solver calls, asserted via counter."""
+    svc1 = PlanService(store=DirectoryStore(tmp_path), workers=1)
+    svc1.submit(_reader_program(), "table").result(timeout=30)
+    assert len(solve_counter) == 1
+    # a different service + planner ("another process") on the same dir
+    svc2 = PlanService(store=DirectoryStore(tmp_path), workers=1)
+    ticket = svc2.submit(_reader_program(), "table")
+    assert ticket.done()                          # answered inside submit
+    assert len(solve_counter) == 1                # NO solver call
+    plan = ticket.result()
+    assert plan.status == "cached-disk"
+    assert svc2.stats.sync_hits == 1 and svc2.stats.queued == 0
+    # the artifact comes straight off the shared store too
+    art = ticket.artifact()
+    assert art.n_banks == plan.best.num_banks
+
+
+def test_use_cache_false_always_resolves(solve_counter):
+    svc = PlanService(workers=1)
+    svc.submit(_reader_program(), "table").result(timeout=30)
+    t = svc.submit(_reader_program(), "table", use_cache=False)
+    t.result(timeout=30)
+    assert len(solve_counter) == 2
+
+
+# ---------------------------------------------------------------------------
+# Stale-while-revalidate: near-match serves, exact solve runs speculatively
+# ---------------------------------------------------------------------------
+
+
+def test_stale_near_match_serves_while_revalidating(tmp_path, solve_gate):
+    store = DirectoryStore(tmp_path)
+    warm = PlanService(store=store, workers=1)
+    solve_gate.set()   # base solve may run immediately
+    base = warm.submit(_reader_program(), "table",
+                       opts=SolverOptions(n_budget=8)).result(timeout=30)
+    # fresh planner, same store, drifted solver options -> near match
+    gate2 = threading.Event()
+    real = planner_mod.solve
+    seen = []
+
+    def gated2(*a, **kw):
+        seen.append(1)
+        gate2.wait(30)
+        return real(*a, **kw)
+
+    planner_mod.solve = gated2
+    try:
+        svc = PlanService(store=DirectoryStore(tmp_path), workers=1)
+        ticket = svc.submit(_reader_program(), "table",
+                            opts=SolverOptions(n_budget=16))
+        assert ticket.status in ("revalidating", "solving")
+        assert ticket.stale_plan is not None
+        assert ticket.stale_plan.signature == base.signature
+        # the provisional artifact is the near-match scheme, NOT trivial
+        fb = ticket.fallback(backend="numpy")
+        assert fb.n_banks == base.best.num_banks > 1
+        assert svc.stats.revalidations == 1
+        gate2.set()
+        fresh = ticket.result(timeout=30)
+        # the speculative re-plan really solved under the new options
+        assert fresh.status == "solved" and len(seen) == 1
+        assert fresh.signature != base.signature
+        assert fresh.family == base.family
+    finally:
+        gate2.set()
+        planner_mod.solve = real
+
+
+def test_revalidate_can_be_disabled(tmp_path, solve_gate):
+    store = DirectoryStore(tmp_path)
+    solve_gate.set()
+    PlanService(store=store, workers=1).submit(
+        _reader_program(), "table",
+        opts=SolverOptions(n_budget=8)).result(timeout=30)
+    svc = PlanService(store=DirectoryStore(tmp_path), workers=1,
+                      revalidate=StaleWhileRevalidate(enabled=False))
+    ticket = svc.submit(_reader_program(), "table",
+                        opts=SolverOptions(n_budget=16))
+    assert ticket.stale_plan is None
+    assert ticket.fallback(backend="numpy").n_banks == 1   # trivial
+    ticket.result(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# Fallback-first serving with hot swap (the ISSUE acceptance test)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_model():
+    from repro.configs import get_arch
+    from repro.models import get_model
+
+    cfg = get_arch("qwen2_7b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=1, d_model=32, d_ff=64,
+                              vocab=64, n_heads=2, n_kv_heads=2, head_dim=16)
+    return get_model(cfg)
+
+
+def test_server_first_tick_from_fallback_then_hot_swap(solve_gate):
+    """The server serves its first tick from the fallback artifact without
+    waiting on the solver, then hot-swaps to the solved artifact between
+    ticks -- with identical gather results across the swap."""
+    from repro.runtime.server import Request, Server, page_ticket
+
+    svc = PlanService(workers=1)
+    ticket = page_ticket(None, max_len=32, page=8, readers=4, service=svc)
+    assert not ticket.done()                  # solver is gated shut
+    server = Server(_tiny_model(), max_batch=2, max_len=32, kv_plan=ticket)
+    # first-tick layout IS the trivial fallback: one bank = one page
+    assert server.pager.pages_per_slot == 1
+    assert server.pager.page_size >= 32
+    server.submit(Request(uid=0, prompt=np.asarray([3, 4, 5], np.int32),
+                          max_new=6))
+    server.tick()
+    assert server.ticks == 1 and not ticket.done()   # served pre-solve
+    assert len(server.active[0].out) == 1            # a real token came out
+    fb_art, fb_table = server._kv_art, server.kv_records
+    idx = np.asarray([[0, 1, 2], [1, 2, 3]], np.int32)
+    before = np.asarray(fb_art.gather(fb_table, idx))
+    # release the solver; the swap happens between ticks
+    solve_gate.set()
+    assert ticket.wait(30)
+    server._maybe_swap_kv()
+    assert server.swaps == 1
+    solved = server.pager.artifact
+    assert solved.n_banks > 1                        # real banking now
+    assert server.pager.pages_per_slot == solved.n_banks
+    # identical gather results through the solved resolution circuit
+    after = np.asarray(server._kv_art.gather(server.kv_records, idx))
+    np.testing.assert_array_equal(before, after)
+    # and the whole logical record table survived the swap
+    np.testing.assert_array_equal(
+        np.asarray(fb_art.unpack(fb_table)),
+        np.asarray(server._kv_art.unpack(server.kv_records)))
+    server.tick()
+    assert server.swaps == 1                         # swap is one-shot
+    server.run(max_ticks=50)
+    assert not server.active and not server.queue
+    assert server.pager.used_pages == 0              # pages released
+
+
+def test_server_with_done_ticket_and_with_raw_artifact_agree(solve_gate):
+    """A ticket that resolved before the server starts behaves exactly
+    like the legacy solved-artifact path."""
+    from repro.runtime.server import Request, Server, page_ticket
+
+    solve_gate.set()
+    svc = PlanService(workers=1)
+    ticket = page_ticket(None, max_len=32, page=8, readers=4, service=svc)
+    ticket.wait(30)
+    model = _tiny_model()
+    s_ticket = Server(model, max_batch=2, max_len=32, kv_plan=ticket)
+    s_art = Server(model, max_batch=2, max_len=32,
+                   kv_plan=ticket.artifact())
+    assert s_ticket.swaps == 0 and s_ticket._kv_ticket is None
+    assert (s_ticket.pager.pages_per_slot == s_art.pager.pages_per_slot
+            == ticket.artifact().n_banks)
+    for s in (s_ticket, s_art):
+        s.submit(Request(uid=0, prompt=np.asarray([5, 6], np.int32),
+                         max_new=4))
+        s.run(max_ticks=20)
+    assert s_ticket.active == {} and s_art.active == {}
+
+
+def test_batched_tick_gather_is_one_call(monkeypatch, solve_gate):
+    """Server.tick issues exactly ONE banked gather per tick, covering
+    every active slot (stacked (slots, W) index matrix)."""
+    from repro.core.artifact import CompiledBankingPlan
+    from repro.runtime.server import Request, Server, page_ticket
+
+    solve_gate.set()
+    svc = PlanService(workers=1)
+    ticket = page_ticket(None, max_len=32, page=8, readers=4, service=svc)
+    ticket.result(30)
+    server = Server(_tiny_model(), max_batch=2, max_len=32, kv_plan=ticket)
+    calls = []
+    real = CompiledBankingPlan.gather
+
+    def spying(self, table, rows, **kw):
+        calls.append(np.asarray(rows).shape)
+        return real(self, table, rows, **kw)
+
+    monkeypatch.setattr(CompiledBankingPlan, "gather", spying)
+    for uid in range(2):
+        server.submit(Request(uid=uid,
+                              prompt=np.asarray([3 + uid, 4], np.int32),
+                              max_new=3))
+    server.tick()
+    assert len(calls) == 1                      # one pallas_call per tick
+    assert calls[0] == (2, server._gather_window)   # both slots, stacked
+    server.tick()
+    assert len(calls) == 2
