@@ -225,18 +225,90 @@ def bench_plan_service() -> None:
           f"warm_hit={warm_us:.0f}us")
 
 
+def bench_solver_shards(fast: bool = False) -> None:
+    """Sharded candidate-space solve: 1/2/4-shard cold-solve wall-clock
+    plus time-to-first-best, per benchmark problem.
+
+    1-shard runs the in-thread pipeline (work-equivalent to the old
+    monolithic search); multi-shard fans contiguous work units across a
+    process pool with the reducer's section cuts pruning dispatch
+    (``core.candidates.evaluate_parallel``).  Every configuration must
+    agree on the chosen scheme -- the shard-equivalence property.
+    Writes results/BENCH_solver_shards.json.
+    """
+    from repro.core import problems, unroll, build_groups
+    from repro.core.candidates import CandidateSpace, evaluate_parallel
+    from repro.core.planner import rank_solutions
+    from repro.core.solver import SolverOptions
+
+    apps = ["sobel"] if fast else ["sobel", "sw", "spmv"]
+    shard_counts = (1, 2) if fast else (1, 2, 4)
+    out = {}
+    print("\n=== Sharded solver (cold solve, k shards) ===")
+    for app in apps:
+        prog = problems.build(app)
+        memname = list(prog.memories)[0]
+        up = unroll(prog)
+        groups = build_groups(up, memname)
+        mem = prog.memories[memname]
+        rows = {}
+        winners = set()
+        for k in shard_counts:
+            space = CandidateSpace(mem, groups, up.iterators,
+                                   SolverOptions())
+            t0 = time.perf_counter()
+            red = evaluate_parallel(space, k)
+            sols = red.finalize()
+            wall_s = time.perf_counter() - t0
+            best = rank_solutions(list(sols))[0]
+            winners.add((best.kind, str(best.geometry), best.duplicates))
+            rows[str(k)] = {
+                "wall_s": wall_s,
+                "time_to_first_best_s": red.first_best_seconds,
+                "candidates_evaluated": red.evaluated,
+                "space_size": len(space),
+                "solutions": len(sols),
+            }
+            print(f"solver_shards_{app}_k{k},{wall_s*1e6:.0f},"
+                  f"ttfb={red.first_best_seconds*1e6:.0f}us;"
+                  f"evaluated={red.evaluated}/{len(space)}")
+        assert len(winners) == 1, f"shard-equivalence broken for {app}"
+        rows["same_winner_all_k"] = True
+        rows["winner"] = next(iter(winners))[1]
+        out[app] = rows
+    with open("results/BENCH_solver_shards.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+BENCHES = {
+    "solver": lambda fast: bench_solver(),
+    "planner_cache": lambda fast: bench_planner_cache(),
+    "compile_cache": lambda fast: bench_compile_cache(),
+    "plan_service": lambda fast: bench_plan_service(),
+    "solver_shards": bench_solver_shards,
+    "kernels": lambda fast: bench_kernels(),
+    "tables": bench_tables,
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the cost-model CV (slowest part)")
+    ap.add_argument("--only", choices=sorted(BENCHES), default=None,
+                    help="run a single benchmark (CI smoke)")
     args = ap.parse_args()
     import os
     os.makedirs("results", exist_ok=True)
     print("name,us_per_call,derived")
+    if args.only is not None:
+        BENCHES[args.only](args.fast)
+        return
     bench_solver()
     bench_planner_cache()
     bench_compile_cache()
     bench_plan_service()
+    bench_solver_shards(args.fast)
     bench_kernels()
     bench_tables(args.fast)
 

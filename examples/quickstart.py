@@ -17,6 +17,15 @@
 The blocking path still exists: ``BankingPlanner.plan`` is literally
 ``service.submit(...).result()`` -- one code path, two front doors.
 
+Under the hood every cold solve is **sharded**: the worker enumerates a
+``CandidateSpace`` (pruned candidate descriptors, no evaluation), splits
+it into self-contained ``SolveShard`` s, and fans them across the pool;
+a reducer merges the streams.  The ticket exposes the merge live --
+``ticket.best_so_far()`` is the best scheme found *so far* (never
+regresses), so a consumer can promote to it before the search drains,
+and ``ticket.result()`` still lands on the exact scheme the monolithic
+search would have chosen.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -88,6 +97,33 @@ def main():
     raw = plan.best.raw_ops
     print(f"raw mul/div/mod left in resolution arithmetic: {raw} "
           f"(DSP-free: {plan.best.dsp_free})")
+
+    # The sharded search, progressively: a cold resubmit (use_cache=False)
+    # fanned over 4 shards streams its best-so-far through the ticket --
+    # a server would promote its layout on each improvement and still get
+    # the identical final winner from result().
+    live = service.submit(program, "table", use_cache=False, shard_budget=4)
+    trajectory = []
+    while not live.wait(0.0005):
+        best = live.best_so_far()
+        if best is not None and (not trajectory
+                                 or best.score != trajectory[-1]):
+            trajectory.append(best.score)
+    final = live.result(timeout=60)
+    print(f"sharded  : best-so-far scores {trajectory} -> "
+          f"winner {final.best.score:.1f} "
+          f"({service.stats.shards_spawned} shards, "
+          f"{service.stats.best_promotions} promotions)")
+    assert final.best.geometry == plan.best.geometry
+
+    # The same space, enumerated by hand (what the service does inside):
+    from repro.core import CandidateSpace, build_groups, unroll
+    up = unroll(program)
+    space = CandidateSpace(mem, build_groups(up, "table"), up.iterators)
+    shards = space.shards(4)
+    print(f"space    : {len(space)} candidates in "
+          f"{len(space.sections)} sections -> "
+          f"shards of {[len(s) for s in shards]}")
 
 
 if __name__ == "__main__":

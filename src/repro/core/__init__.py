@@ -26,6 +26,15 @@ from .artifact import (
     compile_trivial,
     lane_compile,
 )
+from .candidates import (
+    Candidate,
+    CandidateSpace,
+    SolutionReducer,
+    SolveShard,
+    evaluate,
+    evaluate_parallel,
+    solve_space,
+)
 from .controller import AccessDecl, Counter, Ctrl, Program, Sched, Unroll, unroll
 from .geometry import FlatGeometry, MultiDimGeometry
 from .planner import (
@@ -50,22 +59,24 @@ from .service import (
     StaleWhileRevalidate,
     default_service,
 )
-from .solver import BankingSolution, SolverOptions, solve
+from .solver import BankingSolution, SolverOptions, solve, solve_monolithic
 from .store import DirectoryStore, MemoryStore, PlanStore
 from .grouping import build_groups
 
 __all__ = [
     "Access", "AccessDecl", "AccessGroup", "Affine", "BankingLayout",
-    "BankingPlan", "BankingPlanner", "BankingSolution",
-    "CompiledBankingPlan", "Counter", "Ctrl", "DirectoryStore",
-    "FlatGeometry", "Iterator", "MemorySpec", "MemoryStore",
-    "MultiDimGeometry", "PlanRequest", "PlanService", "PlanStore",
-    "PlanTicket", "PreparedRequest", "Program", "Sched", "SolverOptions",
+    "BankingPlan", "BankingPlanner", "BankingSolution", "Candidate",
+    "CandidateSpace", "CompiledBankingPlan", "Counter", "Ctrl",
+    "DirectoryStore", "FlatGeometry", "Iterator", "MemorySpec",
+    "MemoryStore", "MultiDimGeometry", "PlanRequest", "PlanService",
+    "PlanStore", "PlanTicket", "PreparedRequest", "Program", "Sched",
+    "SolutionReducer", "SolveShard", "SolverOptions",
     "StaleWhileRevalidate", "Unroll", "as_compiled", "build_groups",
     "canonical_signature", "compile_geometry", "compile_plan",
     "compile_solution", "compile_trivial", "default_planner",
-    "default_service", "family_signature", "lane_compile",
-    "program_signature", "rank_solutions", "register_scorer",
-    "registered_scorers", "resolve_scorer", "set_ml_scorer_path", "solve",
-    "unroll",
+    "default_service", "evaluate", "evaluate_parallel",
+    "family_signature", "lane_compile", "program_signature",
+    "rank_solutions", "register_scorer", "registered_scorers",
+    "resolve_scorer", "set_ml_scorer_path", "solve", "solve_monolithic",
+    "solve_space", "unroll",
 ]

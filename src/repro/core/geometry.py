@@ -158,11 +158,23 @@ class ConflictCache:
     Lanes of a vectorized access differ only in constants, so the same
     symbolic delta recurs across many pairs; caching makes the candidate
     sweep cheap (the paper's 'quickly identify valid schemes').
+
+    Also memoizes the *pair deltas themselves*: for a fixed access pair
+    and alpha, the symbolic delta is independent of (N, B), so the affine
+    arithmetic runs once per (pair, alpha) instead of once per candidate
+    geometry -- the dominant cost of a cold candidate sweep.
+
+    One cache may be shared by every shard of a candidate-space solve:
+    entries are pure functions of their keys, so racing threads at worst
+    recompute a value (dict reads/writes are individually atomic).
     """
 
     def __init__(self, iters: Dict[str, Iterator]):
         self.iters = iters
         self._memo: Dict[Tuple, bool] = {}
+        self._deltas: Dict[Tuple, Affine] = {}
+        # pin delta-key accesses: keys embed id(), which must stay unique
+        self._pins: Dict[int, Access] = {}
 
     def conflicts(self, delta: Affine, N: int, B: int) -> bool:
         key = (delta.terms, delta.syms, delta.const % (N * B), N, B)
@@ -172,6 +184,28 @@ class ConflictCache:
             self._memo[key] = hit
         return hit
 
+    def pair_delta(self, a: Access, b: Access,
+                   alpha: Tuple[int, ...]) -> Affine:
+        key = (id(a), id(b), alpha)
+        d = self._deltas.get(key)
+        if d is None:
+            d = _pair_delta(a, b, alpha)
+            self._deltas[key] = d
+            self._pins[id(a)] = a
+            self._pins[id(b)] = b
+        return d
+
+    def dim_delta(self, a: Access, b: Access, dim: int,
+                  alpha_d: int) -> Affine:
+        key = (id(a), id(b), dim, alpha_d)
+        d = self._deltas.get(key)
+        if d is None:
+            d = _dim_delta(a, b, dim, alpha_d)
+            self._deltas[key] = d
+            self._pins[id(a)] = a
+            self._pins[id(b)] = b
+        return d
+
 
 def flat_conflict_edges(
     group: Sequence[Access],
@@ -180,7 +214,7 @@ def flat_conflict_edges(
 ) -> set:
     edges = set()
     for i, j in itertools.combinations(range(len(group)), 2):
-        d = _pair_delta(group[i], group[j], geo.alpha)
+        d = cache.pair_delta(group[i], group[j], geo.alpha)
         if cache.conflicts(d, geo.N, geo.B):
             edges.add((i, j))
     return edges
@@ -208,7 +242,7 @@ def multidim_conflict_edges(
     for i, j in itertools.combinations(range(len(group)), 2):
         all_dims = True
         for d in range(len(geo.Ns)):
-            delta = _dim_delta(group[i], group[j], d, geo.alphas[d])
+            delta = cache.dim_delta(group[i], group[j], d, geo.alphas[d])
             if not cache.conflicts(delta, geo.Ns[d], geo.Bs[d]):
                 all_dims = False
                 break

@@ -293,11 +293,12 @@ def canonical_signature(mem: MemorySpec, groups: List[AccessGroup],
     concurrency-grouped access polytopes, the memory spec (minus its name:
     identity is structural), the iterator domains the accesses reference,
     and the solver options -- so structurally identical programs collide by
-    construction.
+    construction.  The prefix encodes ``SIGNATURE_VERSION``, which is what
+    ``DirectoryStore.sweep()`` keys stale-entry garbage collection on.
     """
     payload = _problem_payload(mem, groups, iters)
     payload["opts"] = asdict(opts)
-    return _hash_payload("bp1-", payload)
+    return _hash_payload(f"bp{SIGNATURE_VERSION}-", payload)
 
 
 def family_signature(mem: MemorySpec, groups: List[AccessGroup],
@@ -308,7 +309,8 @@ def family_signature(mem: MemorySpec, groups: List[AccessGroup],
     suboptimal) scheme for the others, which is what lets the service's
     stale-while-revalidate policy answer from a stored near-match while
     the exact solve runs in the background."""
-    return _hash_payload("bf1-", _problem_payload(mem, groups, iters))
+    return _hash_payload(f"bf{SIGNATURE_VERSION}-",
+                         _problem_payload(mem, groups, iters))
 
 
 def program_signature(program: Program, memory: str,
@@ -808,23 +810,37 @@ class BankingPlanner:
                 return self._hit_copy(plan, prep.memory, "cached-disk")
         return None
 
-    def solve_prepared(self, prep: PreparedRequest) -> BankingPlan:
-        """The expensive half: solve, rank, cache, persist.  This is the
-        single solver entry point -- service workers and the blocking
-        ``plan()`` both end here."""
-        self.stats.misses += 1
-        _, scorer_fn = resolve_scorer(prep.scorer_spec)
-        t0 = time.perf_counter()
-        sols = solve(prep.mem, prep.groups, prep.iterators, prep.opts)
+    def build_space(self, prep: PreparedRequest):
+        """Enumerate the pruned candidate space for a prepared request.
+
+        The single cold-solve chokepoint: the service's sharded workers,
+        the blocking ``plan()``, and direct ``solve_prepared`` calls all
+        start a solve here -- one place to instrument (or gate, in
+        tests) every path that is about to do solver work.
+        """
+        from .candidates import CandidateSpace
+
+        return CandidateSpace(prep.mem, prep.groups, prep.iterators,
+                              prep.opts)
+
+    def complete_solve(self, prep: PreparedRequest, solutions:
+                       List[BankingSolution], solve_seconds: float,
+                       scorer_fn: Optional[Callable] = None
+                       ) -> BankingPlan:
+        """Rank merged solutions, build the plan, cache, persist.
+
+        The back half of every solve: the sharded service reducer and
+        the in-thread ``solve_prepared`` both end here."""
+        if scorer_fn is None:
+            _, scorer_fn = resolve_scorer(prep.scorer_spec)
+        ranked = rank_solutions(solutions, scorer_fn)
         self.stats.solves += 1
-        ranked = rank_solutions(sols, scorer_fn)
-        dt = time.perf_counter() - t0
         plan = BankingPlan(
             memory=prep.memory,
             signature=prep.signature,
             best=ranked[0] if ranked else None,
-            solve_seconds=dt,
-            num_candidates=len(sols),
+            solve_seconds=solve_seconds,
+            num_candidates=len(solutions),
             scorer_name=prep.scorer_name,
             status="solved",
             created_at=time.time(),
@@ -839,6 +855,19 @@ class BankingPlanner:
         if self.store is not None:
             self.store.put(plan)
         return self._adopt(plan)
+
+    def solve_prepared(self, prep: PreparedRequest) -> BankingPlan:
+        """The expensive half, in-thread: enumerate -> evaluate (one
+        shard) -> reduce -> rank -> persist."""
+        from .candidates import solve_space
+
+        self.stats.misses += 1
+        _, scorer_fn = resolve_scorer(prep.scorer_spec)
+        t0 = time.perf_counter()
+        space = self.build_space(prep)
+        sols = solve_space(space, scorer=scorer_fn)
+        dt = time.perf_counter() - t0
+        return self.complete_solve(prep, sols, dt, scorer_fn)
 
     def plan_prepared(self, prep: PreparedRequest) -> BankingPlan:
         """lookup-or-solve for an already-prepared request (worker path)."""

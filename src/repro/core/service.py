@@ -26,6 +26,16 @@ execute**:
   memory + access polytopes, drifted solver options), the ticket serves
   that near-match as its provisional artifact while the exact solve runs
   speculatively in the background.
+* Cold solves are **sharded**: the claiming worker enumerates the
+  problem's :class:`~repro.core.candidates.CandidateSpace`, splits it
+  into up to ``shard_budget`` :class:`SolveShard` s, and fans them back
+  across this same worker pool.  A
+  :class:`~repro.core.candidates.SolutionReducer` merges the shard
+  streams; ``ticket.best_so_far()`` exposes its ranked best
+  incrementally, so consumers (the serving runtime's hot swap) can
+  promote to the current best scheme *before* the full search drains --
+  and ``ticket.result()`` still returns exactly the scheme the
+  monolithic search would have chosen.
 
 Tickets deduplicate in-flight work: two submits of the same
 (signature, scorer) share one solve.
@@ -40,7 +50,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple, Union
 
-from .artifact import CompiledBankingPlan, compile_trivial
+from .artifact import CompiledBankingPlan, compile_solution, compile_trivial
+from .candidates import SolutionReducer, SolveShard, evaluate
 from .planner import (
     BankingPlan,
     BankingPlanner,
@@ -48,9 +59,10 @@ from .planner import (
     PreparedRequest,
     ScorerLike,
     default_planner,
+    resolve_scorer,
 )
 from .polytope import MemorySpec
-from .solver import SolverOptions
+from .solver import BankingSolution, SolverOptions
 from .store import PlanStore, as_store
 
 
@@ -95,7 +107,7 @@ class PlanTicket:
     """
 
     def __init__(self, *, service: "PlanService", prep: PreparedRequest,
-                 priority: int = 0):
+                 priority: int = 0, shard_budget: Optional[int] = None):
         self._service = service
         self._prep = prep
         self.memory = prep.memory
@@ -103,6 +115,7 @@ class PlanTicket:
         self.family = prep.family
         self.scorer_name = prep.scorer_name
         self.priority = priority
+        self.shard_budget = shard_budget
         self.submitted_at = time.time()
         self.status = "queued"
         self._event = threading.Event()
@@ -110,6 +123,9 @@ class PlanTicket:
         self._error: Optional[BaseException] = None
         self._stale: Optional[BankingPlan] = None
         self._fallbacks: Dict[str, CompiledBankingPlan] = {}
+        self._reducer: Optional[SolutionReducer] = None
+        self._best_arts: Dict[Tuple[int, str], CompiledBankingPlan] = {}
+        self._final_version = 0
         self._claimed = False
         self._lock = threading.Lock()
 
@@ -135,6 +151,75 @@ class PlanTicket:
         """The *solved* compiled artifact (blocks like ``result``)."""
         return self._service.planner.compile(self.result(timeout),
                                              backend=backend)
+
+    # -- progressive results -------------------------------------------------------
+    def best_so_far(self) -> Optional[BankingSolution]:
+        """The best-ranked scheme the sharded search has admitted so far.
+
+        ``None`` until the first valid candidate lands; never regresses
+        in score as shards stream in; equal to ``result().best`` once
+        the ticket resolves.  A ticket whose search *failed* keeps
+        serving the partial best the dead search had found.  Consumers
+        that can re-layout cheaply (the serving runtime's page pool)
+        promote to it between ticks instead of waiting for the full
+        search to drain.
+        """
+        if self._event.is_set() and self._error is None \
+                and self._plan is not None:
+            return self._plan.best
+        red = self._reducer
+        return red.best() if red is not None else None
+
+    def best_version(self) -> int:
+        """Monotone counter: bumps each time ``best_so_far`` improves.
+        Poll it to promote only when the best actually changed."""
+        red = self._reducer
+        return red.version if red is not None else self._final_version
+
+    def _release_reducer(self) -> None:
+        """Drop the search machinery once the plan holds the answer --
+        the reducer pins the whole candidate space, conflict caches, and
+        every admitted solution, which a resolved ticket no longer
+        needs."""
+        red = self._reducer
+        if red is not None:
+            self._final_version = red.version
+            self._reducer = None
+        with self._lock:
+            self._best_arts.clear()
+
+    def best_so_far_artifact(self, backend: str = "jax"
+                             ) -> Optional[CompiledBankingPlan]:
+        """Compiled artifact of the current best-so-far scheme (the
+        solved artifact once done; a failed search's partial best, like
+        ``best_so_far``).  Lowering is cached per best-version, so
+        polling between ticks re-lowers only on improvement."""
+        if self.done() and self._error is None:
+            if self._plan is None or self._plan.best is None:
+                return None
+            return self._service.planner.compile(self._plan,
+                                                 backend=backend)
+        red = self._reducer
+        if red is None:
+            return None
+        sol, version = red.best_with_version()
+        if sol is None:
+            return None
+        key = (version, backend)
+        with self._lock:
+            art = self._best_arts.get(key)
+        if art is not None:
+            return art
+        art = compile_solution(sol, signature=self.signature,
+                               backend=backend,
+                               scorer_name=self.scorer_name)
+        with self._lock:
+            # keep only the newest version per backend: stale lowers
+            # are dead weight once the best has moved on
+            for k in [k for k in self._best_arts if k[1] == backend]:
+                del self._best_arts[k]
+            self._best_arts[key] = art
+        return art
 
     # -- immediate execution -----------------------------------------------------
     @property
@@ -198,6 +283,48 @@ class ServiceStats:
     solved: int = 0
     errors: int = 0
     revalidations: int = 0   # tickets served a stale near-match
+    shards_spawned: int = 0  # SolveShards fanned across the worker pool
+    shards_completed: int = 0
+    best_promotions: int = 0  # times a ticket's best-so-far improved
+    dedup_hits: int = 0      # duplicate schemes dropped by the reducers
+
+
+@dataclass
+class _SolveState:
+    """Book-keeping for one in-flight sharded solve: the reducer shared
+    by its shard jobs, plus completion/error accounting.  The worker
+    that finishes the last shard finalizes the plan and resolves the
+    ticket."""
+
+    prep: PreparedRequest
+    ticket: "PlanTicket"
+    reducer: SolutionReducer
+    scorer_fn: object
+    started: float
+    remaining: int
+    failed: bool = False
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def shard_finished(self) -> bool:
+        """True for exactly the caller that completed the last shard."""
+        with self.lock:
+            self.remaining -= 1
+            return self.remaining == 0 and not self.failed
+
+    def fail(self, exc: BaseException) -> bool:
+        """Record the first failure; returns True for that first caller."""
+        with self.lock:
+            first = not self.failed
+            self.failed = True
+        if first:
+            self.reducer.cancel()   # stop sibling shards early
+        return first
+
+
+@dataclass
+class _ShardJob:
+    state: _SolveState
+    shard: SolveShard
 
 
 _SENTINEL = None
@@ -215,12 +342,15 @@ class PlanService:
     workers : worker-pool width (threads spawn lazily on first miss)
     revalidate : the :class:`StaleWhileRevalidate` policy (pass
         ``StaleWhileRevalidate(enabled=False)`` to disable)
+    shard_budget : default shards per cold solve (per-submit override
+        via ``submit(..., shard_budget=...)``); 1 disables sharding
     """
 
     def __init__(self, planner: Optional[BankingPlanner] = None, *,
                  store: Optional[Union[PlanStore, str]] = None,
                  workers: int = 2,
-                 revalidate: Optional[StaleWhileRevalidate] = None):
+                 revalidate: Optional[StaleWhileRevalidate] = None,
+                 shard_budget: Optional[int] = None):
         if planner is None:
             planner = BankingPlanner(store=as_store(store))
         self.planner = planner
@@ -238,6 +368,9 @@ class PlanService:
         self._trivial: Dict[Tuple, CompiledBankingPlan] = {}
         self._threads = []
         self._max_workers = max(1, int(workers))
+        self.shard_budget = max(1, int(shard_budget)
+                                if shard_budget is not None
+                                else self._max_workers)
         self._shutdown = False
         self._lock = threading.Lock()
 
@@ -246,17 +379,21 @@ class PlanService:
                opts: Optional[SolverOptions] = None,
                scorer: ScorerLike = None,
                use_cache: bool = True,
-               priority: int = 0) -> PlanTicket:
+               priority: int = 0,
+               shard_budget: Optional[int] = None) -> PlanTicket:
         """Pose one banking problem; returns a :class:`PlanTicket`.
 
         Runs unroll + grouping + signature + cache probe inline (bad
         memories / unknown scorers raise here, warm caches return a
         ticket that is already ``done()``); cold problems are queued for
-        the worker pool.  Lower ``priority`` solves first.
+        the worker pool, which fans each solve across up to
+        ``shard_budget`` candidate-space shards (default: the service's).
+        Lower ``priority`` solves first.
         """
         prep = self.planner.prepare(program, memory, opts=opts,
                                     scorer=scorer, use_cache=use_cache)
-        return self.submit_prepared(prep, priority=priority)
+        return self.submit_prepared(prep, priority=priority,
+                                    shard_budget=shard_budget)
 
     def submit_request(self, request: PlanRequest, *,
                        priority: int = 0) -> PlanTicket:
@@ -264,7 +401,8 @@ class PlanService:
                                     priority=priority)
 
     def submit_prepared(self, prep: PreparedRequest, *,
-                        priority: int = 0) -> PlanTicket:
+                        priority: int = 0,
+                        shard_budget: Optional[int] = None) -> PlanTicket:
         self.stats.submits += 1
         key = (prep.signature, prep.scorer_name)
         if prep.request.use_cache:
@@ -275,7 +413,8 @@ class PlanService:
                                     priority=priority)
                 ticket._resolve(hit)
                 return ticket
-        ticket = PlanTicket(service=self, prep=prep, priority=priority)
+        ticket = PlanTicket(service=self, prep=prep, priority=priority,
+                            shard_budget=shard_budget)
         if prep.request.use_cache:
             # atomic check-and-register: concurrent submits of the same
             # (signature, scorer) must share ONE solve
@@ -336,23 +475,100 @@ class PlanService:
             try:
                 if item[2] is _SENTINEL:
                     return
-                _, _, prep, ticket = item
+                _, _, payload, ticket = item
+                if isinstance(payload, _ShardJob):
+                    self._run_shard(payload, ticket)
+                    continue
                 if not ticket._claim():
                     continue   # duplicate entry (priority upgrade) or done
                 try:
-                    plan = self.planner.plan_prepared(prep)
+                    plan = (self.planner.lookup(payload)
+                            if payload.request.use_cache else None)
+                    if plan is None:
+                        # cold: fan the candidate space across the pool;
+                        # the last shard's worker resolves the ticket
+                        self._launch_shards(payload, ticket)
+                        continue
                 except BaseException as e:  # surface through result()
-                    self.stats.errors += 1
-                    ticket._fail(e)
+                    self._finish(ticket, payload, error=e)
                 else:
-                    self.stats.solved += 1
-                    ticket._resolve(plan)
-                with self._lock:
-                    key = (prep.signature, prep.scorer_name)
-                    if self._inflight.get(key) is ticket:
-                        del self._inflight[key]
+                    self._finish(ticket, payload, plan=plan)
             finally:
                 self._queue.task_done()
+
+    def _launch_shards(self, prep: PreparedRequest,
+                       ticket: PlanTicket) -> None:
+        """Enumerate the candidate space and enqueue one job per shard
+        at the ticket's priority.  Runs on the claiming worker so scorer
+        resolution (lazy "ml" training) stays off the submitter's
+        thread, exactly like the old monolithic solve."""
+        self.planner.stats.misses += 1
+        space = self.planner.build_space(prep)
+        _, scorer_fn = resolve_scorer(prep.scorer_spec)
+        reducer = SolutionReducer(space, scorer=scorer_fn)
+        ticket._reducer = reducer
+        budget = (ticket.shard_budget if ticket.shard_budget is not None
+                  else self.shard_budget)
+        shards = space.shards(max(1, budget))
+        state = _SolveState(prep=prep, ticket=ticket, reducer=reducer,
+                            scorer_fn=scorer_fn,
+                            started=time.perf_counter(),
+                            remaining=len(shards))
+        if not shards:   # empty candidate space: resolve immediately
+            self._finish(ticket, prep, plan=self.planner.complete_solve(
+                prep, [], 0.0, scorer_fn))
+            return
+        with self._lock:
+            self.stats.shards_spawned += len(shards)
+        for shard in shards:
+            self._queue.put((ticket.priority, next(self._seq),
+                             _ShardJob(state=state, shard=shard), ticket))
+        self._ensure_workers()
+
+    def _run_shard(self, job: _ShardJob, ticket: PlanTicket) -> None:
+        state = job.state
+        try:
+            for ev in evaluate(job.shard, gate=state.reducer):
+                state.reducer.add(ev)
+        except BaseException as e:
+            if state.fail(e):
+                self._finish(ticket, state.prep, error=e)
+            return
+        finally:
+            with self._lock:
+                self.stats.shards_completed += 1
+        if state.shard_finished():
+            try:
+                red = state.reducer
+                plan = self.planner.complete_solve(
+                    state.prep, red.finalize(),
+                    time.perf_counter() - state.started, state.scorer_fn)
+                with self._lock:
+                    self.stats.best_promotions += red.promotions
+                    self.stats.dedup_hits += red.dedup_hits
+            except BaseException as e:
+                self._finish(ticket, state.prep, error=e)
+            else:
+                self._finish(ticket, state.prep, plan=plan)
+
+    def _finish(self, ticket: PlanTicket, prep: PreparedRequest, *,
+                plan: Optional[BankingPlan] = None,
+                error: Optional[BaseException] = None) -> None:
+        if error is not None:
+            with self._lock:
+                self.stats.errors += 1
+            ticket._fail(error)
+            # the reducer stays attached: a failed search's partial best
+            # remains servable through best_so_far()
+        else:
+            with self._lock:
+                self.stats.solved += 1
+            ticket._resolve(plan)   # done flips first: best_so_far now
+            ticket._release_reducer()  # reads the plan, so drop the search
+        with self._lock:
+            key = (prep.signature, prep.scorer_name)
+            if self._inflight.get(key) is ticket:
+                del self._inflight[key]
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every queued problem has been solved (or fail the

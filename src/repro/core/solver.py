@@ -463,28 +463,42 @@ def search_duplication(mem: MemorySpec, groups: List[AccessGroup],
         sols = search_flat(mem, others + [worst_subset], iters, sub_opts,
                            duplicates=D, note=f"dup x{D}")
         # the SAME geometry must be conflict-free for EVERY duplicate's
-        # subset (writes are broadcast to all duplicates)
+        # subset (writes are broadcast to all duplicates).  The `others`
+        # groups don't change per duplicate -- the sub-search above
+        # already verified them for every emitted geometry -- so only
+        # each duplicate's subset needs re-checking, and a geometry's
+        # verdict is shared across its P-proposal variants.
+        verdicts: Dict[Tuple, bool] = {}
         valid = []
         for s in sols:
-            ok = True
-            for sub in subsets:
-                for g in [AccessGroup(list(gg) )
-                          for gg in others] + [sub]:
-                    edges = flat_conflict_edges(list(g), s.geometry, cache)
-                    if _max_conflict_clique(len(g), edges) > mem.ports:
+            gkey = (s.geometry.N, s.geometry.B, s.geometry.alpha)
+            ok = verdicts.get(gkey)
+            if ok is None:
+                ok = True
+                for sub in subsets:
+                    edges = flat_conflict_edges(list(sub), s.geometry,
+                                                cache)
+                    if _max_conflict_clique(len(sub), edges) > mem.ports:
                         ok = False
                         break
-                if not ok:
-                    break
+                verdicts[gkey] = ok
             if ok:
                 valid.append(s)
         out.extend(valid[:2])
     return out
 
 
-def solve(mem: MemorySpec, groups: List[AccessGroup],
-          iters: Dict[str, Iterator],
-          opts: Optional[SolverOptions] = None) -> List[BankingSolution]:
+def solve_monolithic(mem: MemorySpec, groups: List[AccessGroup],
+                     iters: Dict[str, Iterator],
+                     opts: Optional[SolverOptions] = None
+                     ) -> List[BankingSolution]:
+    """The pre-pipeline single-threaded nested-loop search.
+
+    Kept as the reference implementation: the shard-equivalence property
+    (tests/test_candidates.py) asserts that merging ``evaluate()`` over
+    ``CandidateSpace.shards(k)`` reproduces this function's chosen
+    scheme for any k.
+    """
     opts = opts or SolverOptions()
     sols = search_flat(mem, groups, iters, opts)
     if opts.allow_multidim:
@@ -492,3 +506,21 @@ def solve(mem: MemorySpec, groups: List[AccessGroup],
     if opts.allow_duplication:
         sols += search_duplication(mem, groups, iters, opts)
     return sols
+
+
+def solve(mem: MemorySpec, groups: List[AccessGroup],
+          iters: Dict[str, Iterator],
+          opts: Optional[SolverOptions] = None) -> List[BankingSolution]:
+    """Construct the banking solution set for one problem.
+
+    Since the candidate-space redesign this is the single-shard run of
+    the shardable pipeline (enumerate -> evaluate -> reduce; see
+    :mod:`repro.core.candidates`): the same code path the service's
+    sharded workers fan out across, with the reducer's section cuts
+    reproducing the classic early-exit budgets, so the result matches
+    :func:`solve_monolithic` exactly.
+    """
+    from .candidates import CandidateSpace, solve_space
+
+    space = CandidateSpace(mem, groups, iters, opts or SolverOptions())
+    return solve_space(space)

@@ -223,16 +223,25 @@ class DirectoryStore(PlanStore):
     directory written by either API serves the other.  All writes are
     lock-file-guarded tmp+rename; reads are lock-free and treat unreadable
     or torn files as misses.
+
+    ``max_bytes`` caps the store: after every write, least-recently-used
+    entries (by mtime -- reads touch their file, so a hot entry stays
+    young) are evicted until the plan/artifact files fit the cap.
+    ``sweep()`` garbage-collects entries written under a stale
+    ``SIGNATURE_VERSION`` -- their signatures can never be probed again,
+    so they are dead weight after a version bump.
     """
 
     LOCK_NAME = ".store.lock"
 
     def __init__(self, path: Union[str, Path], *, lock_timeout: float = 10.0,
-                 lock_stale_seconds: float = 30.0):
+                 lock_stale_seconds: float = 30.0,
+                 max_bytes: Optional[int] = None):
         self.path = Path(path)
         self.path.mkdir(parents=True, exist_ok=True)
         self._lock_timeout = lock_timeout
         self._lock_stale = lock_stale_seconds
+        self.max_bytes = max_bytes
         # family -> (created_at, signature, scorer_name), rebuilt only
         # when the directory mtime moves (see find_family)
         self._family_index: Dict[str, Tuple[float, str, str]] = {}
@@ -259,9 +268,11 @@ class DirectoryStore(PlanStore):
 
         p = self.plan_path(signature, scorer_name)
         try:
-            return BankingPlan.from_json(json.loads(p.read_text()))
+            plan = BankingPlan.from_json(json.loads(p.read_text()))
         except _MISS_ERRORS:
             return None  # absent, torn, or foreign file: a miss
+        self._touch(p)
+        return plan
 
     def put(self, plan) -> None:
         path = self.plan_path(plan.signature, plan.scorer_name)
@@ -272,14 +283,25 @@ class DirectoryStore(PlanStore):
                      backend: str) -> Optional[CompiledBankingPlan]:
         p = self.artifact_path(signature, scorer_name, backend)
         try:
-            return CompiledBankingPlan.from_json(json.loads(p.read_text()))
+            art = CompiledBankingPlan.from_json(json.loads(p.read_text()))
         except _MISS_ERRORS:
             return None
+        self._touch(p)
+        return art
 
     def put_artifact(self, artifact: CompiledBankingPlan) -> None:
         path = self.artifact_path(artifact.signature, artifact.scorer_name,
                                   artifact.backend)
         self._write_locked(path, artifact.to_json())
+
+    @staticmethod
+    def _touch(path: Path) -> None:
+        """Freshen mtime on a read hit, so LRU eviction spares hot
+        entries.  Best-effort: a read-only store still serves."""
+        try:
+            os.utime(path)
+        except OSError:
+            pass
 
     def _write_locked(self, path: Path, payload: dict) -> None:
         blob = json.dumps(payload, indent=1, sort_keys=True)
@@ -288,8 +310,67 @@ class DirectoryStore(PlanStore):
                 tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
                 tmp.write_text(blob)
                 tmp.replace(path)
+                self._evict_locked()
         except (TimeoutError, OSError):
             pass  # durability is best-effort; in-memory caches still hold
+
+    # -- eviction + versioning ---------------------------------------------------
+    def _entries(self):
+        """(path, mtime, size) of every plan/artifact file.  Foreign
+        files sharing the directory (``ml_scorer.json``, the lock, tmp
+        leftovers) are never eviction candidates."""
+        out = []
+        for f in self.path.glob("bp*.json"):
+            try:
+                st = f.stat()
+            except OSError:
+                continue
+            out.append((f, st.st_mtime, st.st_size))
+        return out
+
+    def _evict_locked(self) -> int:
+        """Drop least-recently-used entries until under ``max_bytes``.
+        Caller holds the store lock."""
+        if self.max_bytes is None:
+            return 0
+        entries = self._entries()
+        total = sum(size for _, _, size in entries)
+        removed = 0
+        for f, _, size in sorted(entries, key=lambda e: e[1]):
+            if total <= self.max_bytes:
+                break
+            try:
+                f.unlink()
+            except OSError:
+                continue  # another process got there first
+            total -= size
+            removed += 1
+        return removed
+
+    def sweep(self) -> int:
+        """Garbage-collect entries whose ``SIGNATURE_VERSION`` is stale.
+
+        Signatures embed the version in their prefix (``bp<V>-``); a
+        version bump makes every older entry unreachable -- no probe
+        will ever hash to its key again -- so they only waste the size
+        budget.  Returns the number of files removed.
+        """
+        from .planner import SIGNATURE_VERSION
+
+        live = f"bp{SIGNATURE_VERSION}-"
+        removed = 0
+        try:
+            with self._lock():
+                for f, _, _ in self._entries():
+                    if not f.name.startswith(live):
+                        try:
+                            f.unlink()
+                            removed += 1
+                        except OSError:
+                            pass
+        except (TimeoutError, OSError):
+            pass
+        return removed
 
     # -- enumeration -----------------------------------------------------------
     def plans(self) -> Iterable:

@@ -29,14 +29,31 @@ def main():
     ap.add_argument("--plan-store", default=None,
                     help="directory shared across serving processes; a warm "
                          "store answers the submit before the first tick")
+    ap.add_argument("--plan-store-max-mb", type=float, default=None,
+                    help="size-cap the plan store: LRU entries are evicted "
+                         "past this many MB, and stale SIGNATURE_VERSION "
+                         "entries are swept at startup")
     args = ap.parse_args()
 
     import numpy as np
 
     from ..configs import get_arch
     from ..core.service import PlanService
+    from ..core.store import DirectoryStore
     from ..models import get_model
     from ..runtime.server import Request, Server, page_ticket
+
+    # plan store first: sweeping stale-version entries and building the
+    # service costs nothing that overlaps the model build below
+    service = None
+    if args.plan_store:
+        max_bytes = (int(args.plan_store_max_mb * 2 ** 20)
+                     if args.plan_store_max_mb is not None else None)
+        store = DirectoryStore(args.plan_store, max_bytes=max_bytes)
+        swept = store.sweep()
+        if swept:
+            print(f"plan store: swept {swept} stale-version entries")
+        service = PlanService(store=store)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -45,8 +62,6 @@ def main():
 
     # submit -> ticket: model build and solver overlap; the server's first
     # tick runs from the fallback artifact if the solve hasn't landed
-    service = (PlanService(store=args.plan_store) if args.plan_store
-               else None)
     t_submit = time.perf_counter()
     ticket = page_ticket(cfg, max_len=args.max_len,
                          page=min(16, args.max_len // 4),
@@ -70,6 +85,9 @@ def main():
     server.run(max_ticks=5000)
     dt = time.perf_counter() - t0
     total_tokens = args.requests * args.max_new
+    if server.promotions:
+        print(f"promoted to best-so-far layouts {server.promotions}x "
+              f"before the search drained")
     if server.swaps:
         print(f"hot-swapped to solved layout after tick <= {server.ticks}: "
               f"{server.pager.artifact.describe()}")

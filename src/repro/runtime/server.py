@@ -200,6 +200,8 @@ class Server:
         if art is not None:
             self._adopt_kv_artifact(art, records=None)
         self.swaps = 0
+        self.promotions = 0       # best-so-far adoptions before the solve
+        self._kv_best_version = 0
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.positions = np.zeros(max_batch, np.int64)  # next record slot
         self.ticks = 0
@@ -251,26 +253,48 @@ class Server:
         return out
 
     # -- hot swap -----------------------------------------------------------------
-    def _maybe_swap_kv(self) -> None:
-        """Between ticks: promote the fallback layout to the solved one.
-
-        Atomic from the decode loop's point of view -- the record table is
-        unpacked from the old layout and repacked into the new one, the
-        pager re-pages live slots, and the next tick's gather runs the
-        solved resolution circuit over identical logical records.
-        """
-        t = self._kv_ticket
-        if t is None or not t.done():
-            return
-        self._kv_ticket = None
-        try:
-            art = t.artifact()
-        except Exception:
-            return  # solve failed: keep serving from the fallback layout
+    def _swap_to(self, art: CompiledBankingPlan) -> None:
+        """Adopt a new layout atomically from the decode loop's point of
+        view: the record table is unpacked from the old layout and
+        repacked into the new one, the pager re-pages live slots, and
+        the next tick's gather runs the new resolution circuit over
+        identical logical records."""
         flat = self._kv_art.unpack(self.kv_records)   # logical rows survive
         self._adopt_kv_artifact(art, records=flat)
         self.pager.swap(art)
-        self.swaps += 1
+
+    def _maybe_swap_kv(self) -> None:
+        """Between ticks: promote the page layout toward the solver.
+
+        While the sharded search streams, the ticket's **best-so-far**
+        scheme is adopted whenever it improves (the search never
+        regresses, so each promotion strictly improves the layout); once
+        the ticket resolves, the final solved artifact is swapped in --
+        same winner the monolithic solver would have produced.
+        """
+        t = self._kv_ticket
+        if t is None:
+            return
+        if t.done():
+            self._kv_ticket = None
+            try:
+                art = t.artifact()
+            except Exception:
+                return  # solve failed: keep serving the current layout
+            if art.layout == self._kv_art.layout:
+                return  # a promotion already landed the winning layout
+            self._swap_to(art)
+            self.swaps += 1
+            return
+        version = t.best_version()
+        if version == self._kv_best_version:
+            return
+        self._kv_best_version = version
+        art = t.best_so_far_artifact()
+        if art is None or art.layout == self._kv_art.layout:
+            return
+        self._swap_to(art)
+        self.promotions += 1
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request):

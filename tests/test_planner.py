@@ -25,15 +25,19 @@ def _reader_program(stride=1, count=32, par=8, dims=(256,), name="table"):
 
 @pytest.fixture
 def solve_counter(monkeypatch):
-    """Count real solver invocations made through the planner."""
+    """Count real solver invocations made through the planner.
+
+    Every cold-solve path (the blocking plan() and the service's sharded
+    workers alike) begins by enumerating its candidate space through
+    BankingPlanner.build_space -- the one chokepoint worth counting."""
     calls = []
-    real = planner_mod.solve
+    real = BankingPlanner.build_space
 
-    def counting(*a, **kw):
+    def counting(self, prep):
         calls.append(1)
-        return real(*a, **kw)
+        return real(self, prep)
 
-    monkeypatch.setattr(planner_mod, "solve", counting)
+    monkeypatch.setattr(BankingPlanner, "build_space", counting)
     return calls
 
 

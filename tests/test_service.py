@@ -28,31 +28,34 @@ def _reader_program(stride=1, count=32, par=8, dims=(256,), name="table"):
 
 @pytest.fixture
 def solve_counter(monkeypatch):
+    """Counts cold solves at the universal chokepoint: every path about
+    to do solver work (sharded service workers, blocking plan()) starts
+    by enumerating its candidate space via BankingPlanner.build_space."""
     calls = []
-    real = planner_mod.solve
+    real = BankingPlanner.build_space
 
-    def counting(*a, **kw):
+    def counting(self, prep):
         calls.append(1)
-        return real(*a, **kw)
+        return real(self, prep)
 
-    monkeypatch.setattr(planner_mod, "solve", counting)
+    monkeypatch.setattr(BankingPlanner, "build_space", counting)
     return calls
 
 
 @pytest.fixture
 def solve_gate(monkeypatch):
-    """Blocks the FIRST solver call until .set(); records memory names."""
+    """Blocks the FIRST cold solve until .set(); records memory names."""
     gate = threading.Event()
     order = []
-    real = planner_mod.solve
+    real = BankingPlanner.build_space
 
-    def gated(mem, *a, **kw):
-        order.append(mem.name)
+    def gated(self, prep):
+        order.append(prep.mem.name)
         if len(order) == 1:
             gate.wait(30)
-        return real(mem, *a, **kw)
+        return real(self, prep)
 
-    monkeypatch.setattr(planner_mod, "solve", gated)
+    monkeypatch.setattr(BankingPlanner, "build_space", gated)
     gate.order = order
     yield gate
     gate.set()   # never leave a worker blocked past the test
@@ -100,10 +103,10 @@ def test_submit_time_errors_raise_synchronously():
 
 
 def test_worker_errors_propagate_through_result(monkeypatch):
-    def boom(*a, **kw):
+    def boom(self, prep):
         raise RuntimeError("solver exploded")
 
-    monkeypatch.setattr(planner_mod, "solve", boom)
+    monkeypatch.setattr(BankingPlanner, "build_space", boom)
     svc = PlanService(workers=1)
     ticket = svc.submit(_reader_program(), "table")
     with pytest.raises(RuntimeError, match="solver exploded"):
@@ -151,6 +154,53 @@ def test_dedup_upgrades_priority(solve_gate):
 
 
 # ---------------------------------------------------------------------------
+# Sharded solves: stats counters + progressive best-so-far tickets
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_solve_stats_and_monotone_best(solve_counter):
+    """A cold ticket fans its candidate space across the worker pool:
+    ServiceStats counts shards spawned/completed and best-so-far
+    promotions, and ``best_so_far()`` never regresses in score as the
+    shard streams land -- ending exactly at the plan's winner."""
+    svc = PlanService(workers=2, shard_budget=4)
+    ticket = svc.submit(_reader_program(stride=3, count=64), "table")
+    scores = []
+    while not ticket.wait(0.001):
+        best = ticket.best_so_far()
+        if best is not None:
+            scores.append(best.score)
+    plan = ticket.result(30)
+    assert plan.status == "solved" and len(solve_counter) == 1
+    st = svc.stats
+    assert st.shards_spawned == 4          # one space, four shards
+    assert st.shards_completed == st.shards_spawned
+    assert st.best_promotions >= 1
+    assert st.dedup_hits >= 0
+    assert st.solved == 1
+    scores.append(plan.best.score)          # the winner caps the series
+    assert all(a >= b for a, b in zip(scores, scores[1:]))
+    assert ticket.best_so_far() is plan.best
+    assert ticket.best_version() >= 1
+
+
+def test_shard_budget_one_still_resolves(solve_counter):
+    svc = PlanService(workers=1, shard_budget=1)
+    plan = svc.submit(_reader_program(), "table").result(timeout=30)
+    assert plan.best is not None and svc.stats.shards_spawned == 1
+
+
+def test_sharded_result_matches_blocking_plan():
+    """ticket.result() after a 4-way sharded solve chooses the same
+    scheme as a fresh blocking (single-path) planner."""
+    svc = PlanService(workers=2, shard_budget=4)
+    sharded = svc.submit(_reader_program(stride=2), "table").result(30)
+    blocking = BankingPlanner().plan(_reader_program(stride=2), "table")
+    assert sharded.best.geometry == blocking.best.geometry
+    assert sharded.signature == blocking.signature
+
+
+# ---------------------------------------------------------------------------
 # Warm stores: tickets born done
 # ---------------------------------------------------------------------------
 
@@ -195,15 +245,15 @@ def test_stale_near_match_serves_while_revalidating(tmp_path, solve_gate):
                        opts=SolverOptions(n_budget=8)).result(timeout=30)
     # fresh planner, same store, drifted solver options -> near match
     gate2 = threading.Event()
-    real = planner_mod.solve
+    real = BankingPlanner.build_space
     seen = []
 
-    def gated2(*a, **kw):
+    def gated2(self, prep):
         seen.append(1)
         gate2.wait(30)
-        return real(*a, **kw)
+        return real(self, prep)
 
-    planner_mod.solve = gated2
+    BankingPlanner.build_space = gated2
     try:
         svc = PlanService(store=DirectoryStore(tmp_path), workers=1)
         ticket = svc.submit(_reader_program(), "table",
@@ -223,7 +273,7 @@ def test_stale_near_match_serves_while_revalidating(tmp_path, solve_gate):
         assert fresh.family == base.family
     finally:
         gate2.set()
-        planner_mod.solve = real
+        BankingPlanner.build_space = real
 
 
 def test_revalidate_can_be_disabled(tmp_path, solve_gate):
@@ -297,6 +347,64 @@ def test_server_first_tick_from_fallback_then_hot_swap(solve_gate):
     server.run(max_ticks=50)
     assert not server.active and not server.queue
     assert server.pager.used_pages == 0              # pages released
+
+
+def test_server_promotes_to_best_so_far_mid_search(monkeypatch):
+    """Before the full search drains, the server adopts the ticket's
+    best-so-far scheme between ticks (a *promotion*, not the final
+    swap) -- and the logical record table survives both the promotion
+    and the eventual solved swap."""
+    from repro.core import service as service_mod
+    from repro.runtime.server import Request, Server, page_ticket
+
+    real = service_mod.evaluate
+    reached = threading.Event()    # one valid scheme has streamed
+    release = threading.Event()    # let the search finish
+
+    def paced(shard, gate=None):
+        for ev in real(shard, gate=gate):
+            yield ev
+            if ev.solutions and not reached.is_set():
+                reached.set()
+                assert release.wait(30)
+
+    monkeypatch.setattr(service_mod, "evaluate", paced)
+    try:
+        svc = PlanService(workers=1, shard_budget=1)
+        ticket = page_ticket(None, max_len=32, page=8, readers=4,
+                             service=svc)
+        server = Server(_tiny_model(), max_batch=2, max_len=32,
+                        kv_plan=ticket)
+        assert server.pager.pages_per_slot == 1      # trivial fallback
+        assert reached.wait(30)
+        assert not ticket.done()
+        best = ticket.best_so_far()
+        assert best is not None and ticket.best_version() >= 1
+        server.submit(Request(uid=0,
+                              prompt=np.asarray([3, 4, 5], np.int32),
+                              max_new=6))
+        server.tick()          # _maybe_swap_kv promotes, then serves
+        assert server.promotions == 1 and server.swaps == 0
+        assert server.pager.pages_per_slot > 1       # real banking now
+        assert len(server.active[0].out) == 1
+        promoted_art, promoted_tab = server._kv_art, server.kv_records
+        idx = np.asarray([[0, 1, 2], [1, 2, 3]], np.int32)
+        before = np.asarray(promoted_art.gather(promoted_tab, idx))
+        server._maybe_swap_kv()
+        assert server.promotions == 1                # same version: no-op
+        release.set()
+        assert ticket.wait(30)
+        server._maybe_swap_kv()      # the final solved swap (a no-op if
+        # the promotion already landed the winning layout)
+        assert server._kv_art.layout == ticket.artifact().layout
+        assert server.swaps == (0 if promoted_art.layout
+                                == ticket.artifact().layout else 1)
+        after = np.asarray(server._kv_art.gather(server.kv_records, idx))
+        np.testing.assert_array_equal(before, after)
+        server.run(max_ticks=50)
+        assert not server.active and not server.queue
+    finally:
+        release.set()
 
 
 def test_server_with_done_ticket_and_with_raw_artifact_agree(solve_gate):

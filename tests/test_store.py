@@ -27,14 +27,16 @@ def _reader_program(stride=1, count=32, par=8, dims=(256,), name="table"):
 
 @pytest.fixture
 def solve_counter(monkeypatch):
+    """Counts cold solves at the universal chokepoint (candidate-space
+    enumeration) -- every solve path passes through build_space."""
     calls = []
-    real = planner_mod.solve
+    real = BankingPlanner.build_space
 
-    def counting(*a, **kw):
+    def counting(self, prep):
         calls.append(1)
-        return real(*a, **kw)
+        return real(self, prep)
 
-    monkeypatch.setattr(planner_mod, "solve", counting)
+    monkeypatch.setattr(BankingPlanner, "build_space", counting)
     return calls
 
 
@@ -123,6 +125,98 @@ def test_torn_json_reads_as_miss_and_heals(tmp_path, solve_counter):
     # foreign / wrong-format JSON is also just a miss
     path.write_text(json.dumps({"format": "something-else"}))
     assert store.get(plan.signature, "proxy") is None
+
+
+# ---------------------------------------------------------------------------
+# Eviction + signature versioning
+# ---------------------------------------------------------------------------
+
+
+def test_size_capped_lru_eviction(tmp_path):
+    """A max_bytes store evicts least-recently-used entries (by mtime)
+    after each write; recently-read entries are touched and survive."""
+    probe = DirectoryStore(tmp_path)
+    planner = BankingPlanner(store=probe)
+    plans = [planner.plan(_reader_program(stride=s), "table",
+                          opts=SolverOptions(n_budget=6, max_solutions=4))
+             for s in (1, 2, 3)]
+    sizes = [probe.plan_path(p.signature, "proxy").stat().st_size
+             for p in plans]
+    # cap fits roughly two entries -> writing a third must evict one
+    capped = DirectoryStore(tmp_path, max_bytes=sizes[0] + sizes[1]
+                            + sizes[2] // 2)
+    # age the files oldest-first so LRU order is deterministic
+    now = time.time()
+    for i, p in enumerate(plans):
+        path = capped.plan_path(p.signature, "proxy")
+        os.utime(path, (now - 100 + i, now - 100 + i))
+    # reading the OLDEST entry freshens it...
+    assert capped.get(plans[0].signature, "proxy") is not None
+    # ...so the write-triggered eviction takes the now-oldest instead
+    capped.put(plans[0])
+    assert capped.get(plans[1].signature, "proxy") is None      # evicted
+    assert capped.get(plans[0].signature, "proxy") is not None  # touched
+    total = sum(f.stat().st_size for f in tmp_path.glob("bp*.json"))
+    assert total <= capped.max_bytes
+
+
+def test_sweep_collects_stale_signature_versions(tmp_path):
+    """sweep() removes entries whose filename signature carries a stale
+    SIGNATURE_VERSION prefix -- and nothing else (foreign files like the
+    persisted ml scorer share the directory)."""
+    store = DirectoryStore(tmp_path)
+    planner = BankingPlanner(store=store)
+    plan = planner.plan(_reader_program(), "table",
+                        opts=SolverOptions(n_budget=6, max_solutions=4))
+    live = store.plan_path(plan.signature, "proxy")
+    stale_sig = "bp0-" + plan.signature.split("-", 1)[1]
+    stale = tmp_path / f"{stale_sig}.proxy.json"
+    stale.write_text(live.read_text())
+    stale_art = tmp_path / f"{stale_sig}.proxy.jax.compiled.json"
+    stale_art.write_text("{}")
+    foreign = tmp_path / "ml_scorer.json"
+    foreign.write_text("{}")
+    assert store.sweep() == 2
+    assert not stale.exists() and not stale_art.exists()
+    assert live.exists() and foreign.exists()
+    assert store.get(plan.signature, "proxy") is not None
+    assert store.sweep() == 0        # idempotent
+
+
+def test_serve_launcher_wires_store_cap(tmp_path, monkeypatch):
+    """launch/serve.py --plan-store-max-mb builds a capped store and
+    sweeps it at startup (smoke: flag parsing + wiring only)."""
+    import sys
+
+    from repro.launch import serve as serve_mod
+
+    built = {}
+    real_store = serve_mod.__dict__.get("DirectoryStore")  # noqa: F841
+
+    class SpyStore(DirectoryStore):
+        def __init__(self, path, **kw):
+            super().__init__(path, **kw)
+            built["max_bytes"] = self.max_bytes
+
+        def sweep(self):
+            built["swept"] = True
+            return super().sweep()
+
+    class Bail(Exception):
+        pass
+
+    def stop(*a, **kw):
+        raise Bail()
+
+    monkeypatch.setattr("repro.core.store.DirectoryStore", SpyStore)
+    monkeypatch.setattr("repro.configs.get_arch", stop, raising=False)
+    monkeypatch.setattr(sys, "argv",
+                        ["serve", "--arch", "qwen2_7b", "--smoke",
+                         "--plan-store", str(tmp_path),
+                         "--plan-store-max-mb", "2"])
+    with pytest.raises(Bail):
+        serve_mod.main()
+    assert built == {"max_bytes": 2 * 2 ** 20, "swept": True}
 
 
 # ---------------------------------------------------------------------------
