@@ -280,12 +280,89 @@ def bench_solver_shards(fast: bool = False) -> None:
         json.dump(out, f, indent=1)
 
 
+def bench_solve_fabric(fast: bool = False) -> None:
+    """Distributed solve fabric: cold-solve wall-clock + time-to-first-
+    best for 1/2/4 remote worker subprocesses vs the in-process fork
+    pool, same problem, same-winner assert (shard equivalence over the
+    wire).  Writes results/BENCH_solve_fabric.json.
+    """
+    from repro.core import (CandidateSpace, SolutionReducer, SolveFabric,
+                            build_groups, problems, spawn_local_workers,
+                            unroll)
+    from repro.core.candidates import evaluate_parallel
+    from repro.core.planner import rank_solutions
+    from repro.core.solver import SolverOptions
+
+    apps = ["sobel"] if fast else ["sobel", "sw"]
+    counts = (1, 2) if fast else (1, 2, 4)
+    out = {}
+    print("\n=== Solve fabric (remote workers vs in-process pool) ===")
+    for app in apps:
+        prog = problems.build(app)
+        memname = list(prog.memories)[0]
+        up = unroll(prog)
+        groups = build_groups(up, memname)
+        mem = prog.memories[memname]
+        rows = {}
+        winners = set()
+
+        def record(name, red, wall_s, extra=None):
+            sols = red.finalize()
+            best = rank_solutions(list(sols))[0]
+            winners.add((best.kind, str(best.geometry), best.duplicates))
+            rows[name] = dict(
+                wall_s=wall_s,
+                time_to_first_best_s=red.first_best_seconds,
+                solutions=len(sols), **(extra or {}))
+            ttfb = (red.first_best_seconds or 0.0) * 1e6
+            print(f"solve_fabric_{app}_{name},{wall_s*1e6:.0f},"
+                  f"ttfb={ttfb:.0f}us")
+
+        # in-process pool baseline (the PR-4 scaling primitive)
+        space = CandidateSpace(mem, groups, up.iterators, SolverOptions())
+        t0 = time.perf_counter()
+        red = evaluate_parallel(space, 2)
+        record("pool_k2", red, time.perf_counter() - t0)
+
+        for w in counts:
+            fabric = SolveFabric(chunk=24)
+            procs = spawn_local_workers(fabric.address, w)
+            try:
+                assert fabric.wait_for_workers(w, timeout=60)
+                space = CandidateSpace(mem, groups, up.iterators,
+                                       SolverOptions())
+                red = SolutionReducer(space)
+                t0 = time.perf_counter()
+                report = fabric.solve(space, reducer=red)
+                record(f"fabric_w{w}", red, time.perf_counter() - t0,
+                       extra=dict(leases=report.leases,
+                                  evaluated=report.evaluated,
+                                  cut_broadcasts=report.cut_broadcasts))
+            finally:
+                for p in procs:
+                    p.terminate()
+                for p in procs:
+                    p.wait()
+                fabric.shutdown()
+        assert len(winners) == 1, f"fabric equivalence broken for {app}"
+        rows["same_winner_all_configs"] = True
+        rows["winner"] = next(iter(winners))[1]
+        out[app] = rows
+    # worker counts beyond the host's cores oversubscribe CPU-bound
+    # evaluators (the real win needs N hosts); record the context
+    import os as _os
+    out["host_cpus"] = _os.cpu_count()
+    with open("results/BENCH_solve_fabric.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
 BENCHES = {
     "solver": lambda fast: bench_solver(),
     "planner_cache": lambda fast: bench_planner_cache(),
     "compile_cache": lambda fast: bench_compile_cache(),
     "plan_service": lambda fast: bench_plan_service(),
     "solver_shards": bench_solver_shards,
+    "solve_fabric": bench_solve_fabric,
     "kernels": lambda fast: bench_kernels(),
     "tables": bench_tables,
 }
@@ -309,6 +386,7 @@ def main() -> None:
     bench_compile_cache()
     bench_plan_service()
     bench_solver_shards(args.fast)
+    bench_solve_fabric(args.fast)
     bench_kernels()
     bench_tables(args.fast)
 

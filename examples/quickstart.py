@@ -26,6 +26,12 @@ regresses), so a consumer can promote to it before the search drains,
 and ``ticket.result()`` still lands on the exact scheme the monolithic
 search would have chosen.
 
+The shards don't have to run in this process: a ``SolveFabric`` leases
+the same work units to **remote worker processes** over a socket
+(``launch/solve_worker.py``) and broadcasts best-so-far cut bounds so
+they prune like local shards -- the last section below solves the same
+problem on two worker subprocesses and gets the identical winner.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -124,6 +130,35 @@ def main():
     print(f"space    : {len(space)} candidates in "
           f"{len(space.sections)} sections -> "
           f"shards of {[len(s) for s in shards]}")
+
+    # DISTRIBUTED: the identical search, but the shards run in OTHER
+    # PROCESSES attached over a socket.  A SolveFabric leases work units
+    # to remote workers, streams their scored solutions back into one
+    # reducer, and broadcasts the reducer's cuts so remote shards prune
+    # like local ones.  In production: `launch/serve.py --fabric` prints
+    # the address, and `launch/solve_worker.py HOST:PORT` attaches one
+    # worker per host -- here we spawn two locally.
+    from repro.core import SolveFabric, spawn_local_workers
+    fabric = SolveFabric()
+    workers = spawn_local_workers(fabric.address, 2)
+    try:
+        assert fabric.wait_for_workers(2, timeout=30)
+        service.attach_fabric(fabric)
+        dist = service.submit(program, "table", use_cache=False,
+                              executor="fabric")
+        # best-so-far promotions stream exactly as in-process...
+        remote_plan = dist.result(timeout=120)
+        # ...and the winner is the same scheme, solved on other processes
+        assert remote_plan.best.geometry == plan.best.geometry
+        print(f"fabric   : same winner from {service.stats.fabric_leases} "
+              f"remote leases across 2 workers "
+              f"({service.stats.fabric_cut_broadcasts} cut broadcasts)")
+    finally:
+        for w in workers:
+            w.terminate()
+        for w in workers:
+            w.wait()
+        fabric.shutdown()
 
 
 if __name__ == "__main__":

@@ -29,12 +29,17 @@ from .artifact import (
 from .candidates import (
     Candidate,
     CandidateSpace,
+    CutGate,
     SolutionReducer,
     SolveShard,
     evaluate,
     evaluate_parallel,
+    shard_from_indices,
     solve_space,
+    space_from_wire,
+    space_to_wire,
 )
+from .fabric import SolveFabric, spawn_local_workers
 from .controller import AccessDecl, Counter, Ctrl, Program, Sched, Unroll, unroll
 from .geometry import FlatGeometry, MultiDimGeometry
 from .planner import (
@@ -66,17 +71,18 @@ from .grouping import build_groups
 __all__ = [
     "Access", "AccessDecl", "AccessGroup", "Affine", "BankingLayout",
     "BankingPlan", "BankingPlanner", "BankingSolution", "Candidate",
-    "CandidateSpace", "CompiledBankingPlan", "Counter", "Ctrl",
+    "CandidateSpace", "CompiledBankingPlan", "Counter", "Ctrl", "CutGate",
     "DirectoryStore", "FlatGeometry", "Iterator", "MemorySpec",
     "MemoryStore", "MultiDimGeometry", "PlanRequest", "PlanService",
     "PlanStore", "PlanTicket", "PreparedRequest", "Program", "Sched",
-    "SolutionReducer", "SolveShard", "SolverOptions",
+    "SolutionReducer", "SolveFabric", "SolveShard", "SolverOptions",
     "StaleWhileRevalidate", "Unroll", "as_compiled", "build_groups",
     "canonical_signature", "compile_geometry", "compile_plan",
     "compile_solution", "compile_trivial", "default_planner",
     "default_service", "evaluate", "evaluate_parallel",
     "family_signature", "lane_compile", "program_signature",
     "rank_solutions", "register_scorer", "registered_scorers",
-    "resolve_scorer", "set_ml_scorer_path", "solve", "solve_monolithic",
-    "solve_space", "unroll",
+    "resolve_scorer", "set_ml_scorer_path", "shard_from_indices", "solve",
+    "solve_monolithic", "solve_space", "space_from_wire", "space_to_wire",
+    "spawn_local_workers", "unroll",
 ]

@@ -18,6 +18,8 @@ durable :class:`CompiledBankingPlan` that owns everything execution needs:
   storage (reference Eq. 1-2 arithmetic, vectorized);
 * ``gather(table, rows)`` binding the Pallas banked-gather kernel with the
   compiled resolution arithmetic in its index map;
+* ``scatter(table, rows, values)`` -- the write path through the same
+  circuit (full rows, or single columns for per-slot record writes);
 * ``to_partition_spec(mesh_axes)`` mapping the banked dimensions onto mesh
   axes for device-level banking.
 
@@ -354,6 +356,55 @@ class CompiledBankingPlan:
                                  interpret=interpret)
             return flat.reshape(T, R, flat.shape[-1])
         return banked_gather(table, rows, ba_fn, bo_fn, interpret=interpret)
+
+    def scatter(self, table, rows, values, *, col=None,
+                interpret: Optional[bool] = None):
+        """Write logical rows into bank-major storage -- the write-path
+        analogue of :meth:`gather`.
+
+        ``rows`` is a ``(T,)`` vector of flat logical addresses.  With
+        ``col=None``, ``values`` is a ``(T, D)`` matrix of replacement
+        rows; with ``col`` a ``(T,)`` vector of column indices,
+        ``values`` is a ``(T,)`` vector of scalars written at
+        ``table[ba, bo, col]`` -- one kernel launch for a whole batch of
+        per-slot token-record writes, no read-modify-write.  Returns the
+        updated table (duplicates resolve last-write-wins).
+
+        ``jax`` backend: binds the Pallas banked-scatter kernel -- the
+        compiled BA/BO arithmetic runs in the out-spec index map, in
+        front of the memory like the gather's.  ``numpy`` backend:
+        advanced-indexing assignment through the same compiled
+        resolution callables.
+        """
+        if self.backend == "numpy":
+            ba, bo = self.resolve(np.asarray(rows, dtype=np.int64))
+            out = np.array(table, copy=True)
+            if col is None:
+                out[ba, bo] = values
+            else:
+                out[ba, bo, np.asarray(col, dtype=np.int64)] = values
+            return out
+        from ..kernels.banked_gather import (banked_scatter,
+                                             banked_scatter_elems)
+
+        if interpret is None:
+            import jax
+            interpret = jax.default_backend() != "tpu"
+
+        def ba_fn(addr):
+            return self.ba(*self._split(addr))
+
+        def bo_fn(addr):
+            return self.bo(*self._split(addr))
+
+        import jax.numpy as jnp
+        rows = jnp.asarray(rows)
+        values = jnp.asarray(values, dtype=table.dtype)
+        if col is None:
+            return banked_scatter(table, rows, values, ba_fn, bo_fn,
+                                  interpret=interpret)
+        return banked_scatter_elems(table, rows, jnp.asarray(col), values,
+                                    ba_fn, bo_fn, interpret=interpret)
 
     # -- device-level banking ----------------------------------------------
     def banked_dims(self) -> Tuple[int, ...]:

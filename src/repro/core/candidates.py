@@ -43,12 +43,14 @@ from __future__ import annotations
 
 import itertools
 import math
+import pickle
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from functools import reduce
 from typing import Callable, Dict, Iterator as TIterator, List, Optional, \
-    Tuple
+    Sequence, Tuple
 
 import numpy as np
 
@@ -295,6 +297,31 @@ class CandidateSpace:
                            num_shards=k)
                 for i, s in enumerate(slices) if s]
 
+    # -- adaptive fan-out --------------------------------------------------------
+    def estimated_evaluations(self) -> int:
+        """Expected evaluation work, from enumeration counts alone.
+
+        Each section's walk stops once ``cap`` solutions are emitted, and
+        a valid flat candidate emits up to two P-proposals -- so a
+        section costs at most its full length, and rarely much more than
+        a few times its cap.  The estimate is
+        ``sum(min(len(section), 4 * cap))``: cheap (no evaluation), and
+        the quantity the per-ticket fan-out should be sized from.
+        """
+        return sum(min(s.stop - s.start, 4 * max(s.cap, 1))
+                   for s in self.sections)
+
+    def suggested_shards(self, max_shards: int, *,
+                         min_per_shard: int = 48) -> int:
+        """Adaptive fan-out: how many shards this space is worth.
+
+        Sized from :meth:`estimated_evaluations` so a shard amortizes its
+        dispatch overhead over at least ``min_per_shard`` candidate
+        evaluations; small spaces return 1 and skip fan-out entirely.
+        """
+        est = self.estimated_evaluations()
+        return max(1, min(int(max_shards), est // max(1, min_per_shard)))
+
 
 @dataclass
 class SolveShard:
@@ -495,6 +522,15 @@ class SolutionReducer:
     def stop_index(self, section: int) -> Optional[int]:
         return self._sections[section].cut
 
+    def cuts(self) -> Dict[int, int]:
+        """Snapshot of every published section cut (section index ->
+        exact cut index).  A cut is published at most once and never
+        moves, so snapshots are monotone -- what the distributed fabric
+        broadcasts to in-flight remote workers."""
+        with self._lock:
+            return {s.idx: s.cut for s in self._sections
+                    if s.cut is not None}
+
     # -- stream intake -----------------------------------------------------------
     def add(self, ev: EvaluatedCandidate) -> None:
         with self._lock:
@@ -617,9 +653,7 @@ def _pool_eval(idxs: List[int]) -> List[EvaluatedCandidate]:
 
     The space (and its conflict cache) persists for the worker process's
     lifetime, so memoized residue analyses carry across work units."""
-    shard = SolveShard(space=_POOL_SPACE,
-                       candidates=[_POOL_SPACE.candidates[i] for i in idxs])
-    return list(evaluate(shard))
+    return list(evaluate(shard_from_indices(_POOL_SPACE, idxs)))
 
 
 def evaluate_parallel(space: CandidateSpace, workers: int, *,
@@ -688,14 +722,96 @@ def evaluate_parallel(space: CandidateSpace, workers: int, *,
     return red
 
 
+# ---------------------------------------------------------------------------
+# Wire codecs + remote gate (the distributed work-unit/cut protocol)
+# ---------------------------------------------------------------------------
+#
+# A remote solve ships the candidate space ONCE per worker, then leases
+# tiny work units (candidate index lists) against it; scored evaluation
+# streams flow back and published section cuts flow out.  The codecs are
+# pickle-based (solve workers are trusted peers of the service -- do not
+# point them at untrusted networks) with zlib framing for the space,
+# which dominates the bytes on the wire.
+
+_WIRE_PROTO = pickle.HIGHEST_PROTOCOL
+
+
+def space_to_wire(space: CandidateSpace) -> bytes:
+    """Encode a candidate space for one-shot shipment to a remote
+    worker.  The conflict cache is stripped (``__getstate__``); the
+    worker rebuilds its own on first use and keeps it for the solve's
+    lifetime, so memoized residue analyses span that worker's leases."""
+    return zlib.compress(pickle.dumps(space, protocol=_WIRE_PROTO))
+
+
+def space_from_wire(blob: bytes) -> CandidateSpace:
+    return pickle.loads(zlib.decompress(blob))
+
+
+def events_to_wire(events: Sequence[EvaluatedCandidate]) -> bytes:
+    """Encode a batch of evaluation results (scored solutions attached)
+    for the worker -> reducer stream."""
+    return pickle.dumps(list(events), protocol=_WIRE_PROTO)
+
+
+def events_from_wire(blob: bytes) -> List[EvaluatedCandidate]:
+    return pickle.loads(blob)
+
+
+def shard_from_indices(space: CandidateSpace,
+                       indices: Sequence[int]) -> SolveShard:
+    """Materialize a leased work unit (candidate indices) as a
+    :class:`SolveShard` over a locally-held space."""
+    return SolveShard(space=space,
+                      candidates=[space.candidates[i] for i in indices])
+
+
+class CutGate:
+    """``evaluate()`` gate fed by externally published cuts.
+
+    The remote counterpart of passing the :class:`SolutionReducer`
+    itself as the gate: the service broadcasts ``reducer.cuts()``
+    snapshots over the wire and the worker merges them here, so an
+    in-flight remote shard prunes beyond-cut candidates exactly like a
+    local one.  Cuts only ever appear (never move), so lock-free reads
+    are merely conservative.
+    """
+
+    def __init__(self) -> None:
+        self._cuts: Dict[int, int] = {}
+        self._cancelled = False
+
+    def update(self, cuts: Dict[int, int]) -> None:
+        self._cuts.update(cuts)
+
+    def cancel(self) -> None:
+        self._cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def stop_index(self, section: int) -> Optional[int]:
+        return self._cuts.get(section)
+
+    def snapshot(self) -> Dict[int, int]:
+        return dict(self._cuts)
+
+
 __all__ = [
     "Candidate",
     "CandidateSpace",
+    "CutGate",
     "EvaluatedCandidate",
     "Section",
     "SolutionReducer",
     "SolveShard",
     "evaluate",
     "evaluate_parallel",
+    "events_from_wire",
+    "events_to_wire",
+    "shard_from_indices",
     "solve_space",
+    "space_from_wire",
+    "space_to_wire",
 ]

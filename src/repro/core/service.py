@@ -35,7 +35,15 @@ execute**:
   incrementally, so consumers (the serving runtime's hot swap) can
   promote to the current best scheme *before* the full search drains --
   and ``ticket.result()`` still returns exactly the scheme the
-  monolithic search would have chosen.
+  monolithic search would have chosen.  With no explicit
+  ``shard_budget`` the fan-out is sized **adaptively** from the
+  enumerated space, so small problems skip fan-out overhead.
+* The shard executor is **selectable** (``executor="pool" | "fabric"``,
+  per-service or per-ticket): ``"fabric"`` drives the same work
+  units over a :class:`~repro.core.fabric.SolveFabric` of remote
+  worker processes -- one reducer, many hosts -- with the reducer's cut
+  bounds broadcast live so remote shards prune like local ones.  A
+  fabric with no attached workers falls back to the pool.
 
 Tickets deduplicate in-flight work: two submits of the same
 (signature, scorer) share one solve.
@@ -107,7 +115,8 @@ class PlanTicket:
     """
 
     def __init__(self, *, service: "PlanService", prep: PreparedRequest,
-                 priority: int = 0, shard_budget: Optional[int] = None):
+                 priority: int = 0, shard_budget: Optional[int] = None,
+                 executor: Optional[str] = None):
         self._service = service
         self._prep = prep
         self.memory = prep.memory
@@ -116,6 +125,7 @@ class PlanTicket:
         self.scorer_name = prep.scorer_name
         self.priority = priority
         self.shard_budget = shard_budget
+        self.executor = executor     # None = the service default
         self.submitted_at = time.time()
         self.status = "queued"
         self._event = threading.Event()
@@ -287,6 +297,13 @@ class ServiceStats:
     shards_completed: int = 0
     best_promotions: int = 0  # times a ticket's best-so-far improved
     dedup_hits: int = 0      # duplicate schemes dropped by the reducers
+    adaptive_budgets: int = 0  # cold solves whose fan-out was auto-sized
+    fabric_solves: int = 0   # cold solves run on the remote fabric
+    fabric_fallbacks: int = 0  # fabric requested but no workers: pool ran
+    fabric_leases: int = 0   # work units leased to remote workers
+    fabric_requeues: int = 0  # leases requeued after worker death/timeout
+    fabric_cut_broadcasts: int = 0  # cut snapshots pushed mid-flight
+    fabric_workers_lost: int = 0
 
 
 @dataclass
@@ -329,6 +346,8 @@ class _ShardJob:
 
 _SENTINEL = None
 
+EXECUTORS = ("pool", "fabric")
+
 
 class PlanService:
     """submit/await planning: a priority queue of banking problems drained
@@ -342,15 +361,32 @@ class PlanService:
     workers : worker-pool width (threads spawn lazily on first miss)
     revalidate : the :class:`StaleWhileRevalidate` policy (pass
         ``StaleWhileRevalidate(enabled=False)`` to disable)
-    shard_budget : default shards per cold solve (per-submit override
-        via ``submit(..., shard_budget=...)``); 1 disables sharding
+    shard_budget : shards per cold solve (per-submit override via
+        ``submit(..., shard_budget=...)``); 1 disables sharding and the
+        default ``None`` sizes the fan-out *adaptively* from each
+        problem's enumerated candidate space
+        (:meth:`CandidateSpace.suggested_shards`), so small spaces skip
+        fan-out overhead entirely
+    executor : where cold solves run -- ``"pool"`` (this process's
+        worker threads) or ``"fabric"`` (remote shard workers attached
+        to ``fabric``); per-submit override via
+        ``submit(..., executor=...)``
+    fabric : the :class:`~repro.core.fabric.SolveFabric` backing the
+        ``"fabric"`` executor (attach one later via
+        :meth:`attach_fabric`); a fabric with no live workers falls
+        back to the pool
     """
 
     def __init__(self, planner: Optional[BankingPlanner] = None, *,
                  store: Optional[Union[PlanStore, str]] = None,
                  workers: int = 2,
                  revalidate: Optional[StaleWhileRevalidate] = None,
-                 shard_budget: Optional[int] = None):
+                 shard_budget: Optional[int] = None,
+                 executor: str = "pool",
+                 fabric=None):
+        if executor not in EXECUTORS:
+            raise ValueError(
+                f"unknown executor {executor!r}; one of {EXECUTORS}")
         if planner is None:
             planner = BankingPlanner(store=as_store(store))
         self.planner = planner
@@ -368,11 +404,18 @@ class PlanService:
         self._trivial: Dict[Tuple, CompiledBankingPlan] = {}
         self._threads = []
         self._max_workers = max(1, int(workers))
-        self.shard_budget = max(1, int(shard_budget)
-                                if shard_budget is not None
-                                else self._max_workers)
+        # None = adaptive: sized per problem from its candidate space
+        self.shard_budget = (max(1, int(shard_budget))
+                             if shard_budget is not None else None)
+        self.executor = executor
+        self._fabric = fabric
         self._shutdown = False
         self._lock = threading.Lock()
+
+    def attach_fabric(self, fabric) -> None:
+        """Attach (or replace) the remote solve fabric backing the
+        ``"fabric"`` executor."""
+        self._fabric = fabric
 
     # -- the front door ----------------------------------------------------------
     def submit(self, program, memory: Optional[str] = None, *,
@@ -380,20 +423,24 @@ class PlanService:
                scorer: ScorerLike = None,
                use_cache: bool = True,
                priority: int = 0,
-               shard_budget: Optional[int] = None) -> PlanTicket:
+               shard_budget: Optional[int] = None,
+               executor: Optional[str] = None) -> PlanTicket:
         """Pose one banking problem; returns a :class:`PlanTicket`.
 
         Runs unroll + grouping + signature + cache probe inline (bad
         memories / unknown scorers raise here, warm caches return a
         ticket that is already ``done()``); cold problems are queued for
         the worker pool, which fans each solve across up to
-        ``shard_budget`` candidate-space shards (default: the service's).
+        ``shard_budget`` candidate-space shards (default: the service's,
+        itself defaulting to an adaptive per-problem fan-out) -- or, with
+        ``executor="fabric"``, across the attached remote solve workers.
         Lower ``priority`` solves first.
         """
         prep = self.planner.prepare(program, memory, opts=opts,
                                     scorer=scorer, use_cache=use_cache)
         return self.submit_prepared(prep, priority=priority,
-                                    shard_budget=shard_budget)
+                                    shard_budget=shard_budget,
+                                    executor=executor)
 
     def submit_request(self, request: PlanRequest, *,
                        priority: int = 0) -> PlanTicket:
@@ -402,7 +449,11 @@ class PlanService:
 
     def submit_prepared(self, prep: PreparedRequest, *,
                         priority: int = 0,
-                        shard_budget: Optional[int] = None) -> PlanTicket:
+                        shard_budget: Optional[int] = None,
+                        executor: Optional[str] = None) -> PlanTicket:
+        if executor is not None and executor not in EXECUTORS:
+            raise ValueError(
+                f"unknown executor {executor!r}; one of {EXECUTORS}")
         self.stats.submits += 1
         key = (prep.signature, prep.scorer_name)
         if prep.request.use_cache:
@@ -414,7 +465,7 @@ class PlanService:
                 ticket._resolve(hit)
                 return ticket
         ticket = PlanTicket(service=self, prep=prep, priority=priority,
-                            shard_budget=shard_budget)
+                            shard_budget=shard_budget, executor=executor)
         if prep.request.use_cache:
             # atomic check-and-register: concurrent submits of the same
             # (signature, scorer) must share ONE solve
@@ -498,17 +549,35 @@ class PlanService:
 
     def _launch_shards(self, prep: PreparedRequest,
                        ticket: PlanTicket) -> None:
-        """Enumerate the candidate space and enqueue one job per shard
-        at the ticket's priority.  Runs on the claiming worker so scorer
-        resolution (lazy "ml" training) stays off the submitter's
-        thread, exactly like the old monolithic solve."""
+        """Enumerate the candidate space and run the solve on the chosen
+        executor: enqueue one pool job per shard at the ticket's
+        priority, or drive the remote fabric from this worker thread.
+        Runs on the claiming worker so scorer resolution (lazy "ml"
+        training) stays off the submitter's thread, exactly like the
+        old monolithic solve."""
         self.planner.stats.misses += 1
         space = self.planner.build_space(prep)
         _, scorer_fn = resolve_scorer(prep.scorer_spec)
         reducer = SolutionReducer(space, scorer=scorer_fn)
         ticket._reducer = reducer
-        budget = (ticket.shard_budget if ticket.shard_budget is not None
-                  else self.shard_budget)
+        executor = (ticket.executor if ticket.executor is not None
+                    else self.executor)
+        if executor == "fabric":
+            fabric = self._fabric
+            if fabric is not None and fabric.workers_alive > 0:
+                self._run_fabric_solve(prep, ticket, space, reducer,
+                                       scorer_fn, fabric)
+                return
+            with self._lock:     # no fabric / no workers: the pool runs
+                self.stats.fabric_fallbacks += 1
+        if ticket.shard_budget is not None:
+            budget = ticket.shard_budget
+        elif self.shard_budget is not None:
+            budget = self.shard_budget
+        else:                    # adaptive: sized from the enumeration
+            budget = space.suggested_shards(self._max_workers)
+            with self._lock:
+                self.stats.adaptive_budgets += 1
         shards = space.shards(max(1, budget))
         state = _SolveState(prep=prep, ticket=ticket, reducer=reducer,
                             scorer_fn=scorer_fn,
@@ -524,6 +593,33 @@ class PlanService:
             self._queue.put((ticket.priority, next(self._seq),
                              _ShardJob(state=state, shard=shard), ticket))
         self._ensure_workers()
+
+    def _run_fabric_solve(self, prep: PreparedRequest, ticket: PlanTicket,
+                          space, reducer: SolutionReducer, scorer_fn,
+                          fabric) -> None:
+        """Drive one cold solve over the remote fabric, blocking this
+        worker thread until the merged search drains.  Best-so-far
+        promotions, server hot-swaps, and the final plan are identical
+        to the pool path -- the same reducer merges either way."""
+        started = time.perf_counter()
+        with self._lock:
+            self.stats.fabric_solves += 1
+        try:
+            report = fabric.solve(space, reducer=reducer)
+            plan = self.planner.complete_solve(
+                prep, reducer.finalize(),
+                time.perf_counter() - started, scorer_fn)
+            with self._lock:
+                self.stats.fabric_leases += report.leases
+                self.stats.fabric_requeues += report.requeues
+                self.stats.fabric_cut_broadcasts += report.cut_broadcasts
+                self.stats.fabric_workers_lost += report.workers_lost
+                self.stats.best_promotions += reducer.promotions
+                self.stats.dedup_hits += reducer.dedup_hits
+        except BaseException as e:
+            self._finish(ticket, prep, error=e)
+        else:
+            self._finish(ticket, prep, plan=plan)
 
     def _run_shard(self, job: _ShardJob, ticket: PlanTicket) -> None:
         state = job.state

@@ -495,9 +495,11 @@ def solve_monolithic(mem: MemorySpec, groups: List[AccessGroup],
     """The pre-pipeline single-threaded nested-loop search.
 
     Kept as the reference implementation: the shard-equivalence property
-    (tests/test_candidates.py) asserts that merging ``evaluate()`` over
-    ``CandidateSpace.shards(k)`` reproduces this function's chosen
-    scheme for any k.
+    asserts that merging ``evaluate()`` streams reproduces this
+    function's chosen scheme for any shard count -- whether the shards
+    ran in-thread (tests/test_candidates.py), on a fork pool
+    (``evaluate_parallel``), or on remote solve-fabric workers over the
+    wire (tests/test_fabric.py).
     """
     opts = opts or SolverOptions()
     sols = search_flat(mem, groups, iters, opts)

@@ -1,4 +1,5 @@
-"""Banked gather: the paper's bank-resolution circuit as a Pallas kernel.
+"""Banked gather/scatter: the paper's bank-resolution circuit as Pallas
+kernels.
 
 The memory is stored *bank-major* -- physical layout (N_banks, bank_volume,
 row_width) owned by a ``CompiledBankingPlan`` -- and the kernel gathers
@@ -67,3 +68,85 @@ def banked_gather(table: jax.Array, indices: jax.Array,
         out_shape=jax.ShapeDtypeStruct((T, D), table.dtype),
         interpret=interpret,
     )(indices, table)
+
+
+def _scatter_kernel(idx_ref, v_ref, t_ref, o_ref):
+    # like the gather, the scatter is index-map driven: each grid step
+    # copies one value row into the resolved (bank, offset) slot
+    o_ref[0, 0, :] = v_ref[0]
+
+
+def banked_scatter(table: jax.Array, indices: jax.Array, values: jax.Array,
+                   ba_fn: Callable, bo_fn: Callable, *,
+                   interpret=False) -> jax.Array:
+    """Write logical rows into bank-major storage -- the write-path
+    analogue of :func:`banked_gather`.
+
+    table: (N_banks, bank_volume, D); indices: (T,) flat logical
+    addresses; values: (T, D) replacement rows.  Returns the updated
+    table; the input buffer is donated (``input_output_aliases``), so
+    untouched slots carry over and duplicate indices resolve
+    last-write-wins (sequential grid order).  The BA/BO resolution
+    arithmetic runs in the out-spec index map -- in front of the memory,
+    exactly like the gather.
+    """
+    T = indices.shape[0]
+    N, V, D = table.shape
+    out_spec = pl.BlockSpec((1, 1, D),
+                            lambda t, idx_ref: (ba_fn(idx_ref[t]),
+                                                bo_fn(idx_ref[t]), 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda t, idx_ref: (t, 0)),
+            out_spec,            # aliased table input mirrors the output
+        ],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        input_output_aliases={2: 0},     # operand order: idx, values, table
+        interpret=interpret,
+    )(indices, values, table)
+
+
+def _scatter_elem_kernel(idx_ref, col_ref, v_ref, t_ref, o_ref):
+    o_ref[0, 0, 0] = v_ref[0]
+
+
+def banked_scatter_elems(table: jax.Array, indices: jax.Array,
+                         cols: jax.Array, values: jax.Array,
+                         ba_fn: Callable, bo_fn: Callable, *,
+                         interpret=False) -> jax.Array:
+    """Scatter single elements: ``table[ba(i), bo(i), cols[t]] = values[t]``.
+
+    The column index is prefetched alongside the logical address, so a
+    batch of per-slot token-record writes (the serving runtime's decode
+    tick) lands in ONE kernel launch without read-modify-writing whole
+    rows.  Same donation / last-write-wins semantics as
+    :func:`banked_scatter`.
+    """
+    T = indices.shape[0]
+    out_spec = pl.BlockSpec((1, 1, 1),
+                            lambda t, idx_ref, col_ref: (
+                                ba_fn(idx_ref[t]), bo_fn(idx_ref[t]),
+                                col_ref[t]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda t, idx_ref, col_ref: (t,)),
+            out_spec,
+        ],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        _scatter_elem_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        input_output_aliases={3: 0},     # idx, cols, values, table
+        interpret=interpret,
+    )(indices, cols, values, table)

@@ -59,6 +59,22 @@ def gather_banked(table, indices, compiled, *, interpret=None):
     return as_compiled(compiled).gather(table, indices, interpret=interpret)
 
 
+def scatter_banked(table, indices, values, compiled, *, col=None,
+                   interpret=None):
+    """Write logical rows into a bank-major table through a compiled
+    banking artifact -- the scatter analogue of :func:`gather_banked`.
+
+    ``indices`` is a flat ``(T,)`` vector of logical addresses.  With
+    ``col=None``, ``values`` is ``(T, D)`` replacement rows; with
+    ``col`` a ``(T,)`` vector of column indices, ``values`` is ``(T,)``
+    scalars -- the serving runtime's batched per-slot token-record
+    write.  Returns the updated table; the resolution arithmetic runs in
+    the Pallas out-spec index map (see kernels/banked_gather.py)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return as_compiled(compiled).scatter(table, indices, values, col=col,
+                                         interpret=interpret)
+
+
 def pack_banked(flat, compiled):
     """Layout conversion: logical (A, D) rows -> bank-major (N, V, D) per
     the compiled artifact's physical layout (reference Eq. 1-2 placement --
@@ -78,4 +94,4 @@ def ssd(x, dt, bm, cm, cum, s_prev, *, interpret=None):
 
 
 __all__ = ["dispatch", "gather_banked", "mha", "moe_combine", "pack_banked",
-           "ssd"]
+           "scatter_banked", "ssd"]

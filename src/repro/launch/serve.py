@@ -9,6 +9,16 @@ wait) and hot-swaps to the solved layout between decode ticks.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --requests 8 --max-batch 4
+
+With ``--fabric`` the cold solve runs on REMOTE shard workers: the
+launcher opens a :class:`~repro.core.fabric.SolveFabric` listener
+(``--fabric-listen host:port``) and prints the address; attach any
+number of hosts with
+
+    PYTHONPATH=src python -m repro.launch.solve_worker HOST:PORT
+
+and the server's best-so-far promotions / solved hot-swap work exactly
+as in-process -- the shards just ran somewhere else.
 """
 
 from __future__ import annotations
@@ -33,19 +43,32 @@ def main():
                     help="size-cap the plan store: LRU entries are evicted "
                          "past this many MB, and stale SIGNATURE_VERSION "
                          "entries are swept at startup")
+    ap.add_argument("--fabric", action="store_true",
+                    help="run cold solves on remote shard workers: opens a "
+                         "SolveFabric listener and prints the address to "
+                         "attach solve_worker processes to")
+    ap.add_argument("--fabric-listen", default="127.0.0.1:0",
+                    help="host:port the fabric accepts workers on "
+                         "(port 0 = ephemeral; bind a private interface)")
+    ap.add_argument("--fabric-wait-workers", type=int, default=0,
+                    help="block up to 30s for this many workers before "
+                         "serving (0 = serve immediately; a fabric with no "
+                         "workers falls back to the in-process pool)")
     args = ap.parse_args()
 
     import numpy as np
 
     from ..configs import get_arch
+    from ..core.fabric import SolveFabric
     from ..core.service import PlanService
     from ..core.store import DirectoryStore
     from ..models import get_model
     from ..runtime.server import Request, Server, page_ticket
 
-    # plan store first: sweeping stale-version entries and building the
-    # service costs nothing that overlaps the model build below
-    service = None
+    # plan store + fabric first: sweeping stale-version entries, binding
+    # the worker listener, and building the service all overlap the
+    # model build below
+    store = None
     if args.plan_store:
         max_bytes = (int(args.plan_store_max_mb * 2 ** 20)
                      if args.plan_store_max_mb is not None else None)
@@ -53,7 +76,26 @@ def main():
         swept = store.sweep()
         if swept:
             print(f"plan store: swept {swept} stale-version entries")
-        service = PlanService(store=store)
+    fabric = None
+    if args.fabric:
+        host, _, port = args.fabric_listen.rpartition(":")
+        fabric = SolveFabric(listen=(host or "127.0.0.1", int(port)))
+        print(f"solve fabric listening on {fabric.address} -- attach "
+              f"workers with: python -m repro.launch.solve_worker "
+              f"{fabric.address}")
+        if args.fabric_wait_workers:
+            if fabric.wait_for_workers(args.fabric_wait_workers,
+                                       timeout=30.0):
+                print(f"fabric: {fabric.workers_alive} workers attached")
+            else:
+                print("fabric: workers did not attach in time; cold "
+                      "solves fall back to the in-process pool")
+    service = None
+    if store is not None or fabric is not None:
+        service = PlanService(
+            store=store,
+            executor="fabric" if fabric is not None else "pool",
+            fabric=fabric)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -94,6 +136,13 @@ def main():
     print(f"served {args.requests} requests ({total_tokens} tokens) in "
           f"{server.ticks} ticks, {dt:.1f}s "
           f"({total_tokens/dt:.1f} tok/s on this host)")
+    if service is not None and service.stats.fabric_solves:
+        print(f"fabric: {service.stats.fabric_solves} remote solves, "
+              f"{service.stats.fabric_leases} leases, "
+              f"{service.stats.fabric_cut_broadcasts} cut broadcasts, "
+              f"{service.stats.fabric_requeues} requeues")
+    if fabric is not None:
+        fabric.shutdown()
 
 
 if __name__ == "__main__":

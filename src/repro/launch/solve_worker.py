@@ -1,0 +1,159 @@
+"""Remote solve worker: attach this host's CPU to a SolveFabric.
+
+    python -m repro.launch.solve_worker HOST:PORT [--procs N]
+
+Connects to the fabric a serving launcher opened with ``--fabric``
+(``launch/serve.py`` prints the address), receives candidate spaces and
+work-unit leases over the wire protocol, evaluates them through the
+exact same :func:`repro.core.candidates.evaluate` pipeline the
+in-process pool uses, and streams scored solution batches back.  Run it
+on N hosts to attach N hosts to one service.
+
+Cut updates broadcast by the service land in a :class:`CutGate`, so a
+lease already being evaluated prunes beyond-cut candidates mid-stream
+-- the remote analogue of the in-process reducer gate.
+
+The worker deliberately never imports jax: it starts in a fraction of a
+second and evaluation is pure numpy, so spinning one per core is cheap.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import queue
+import socket
+import threading
+from typing import Dict
+
+from ..core.candidates import (
+    CandidateSpace,
+    CutGate,
+    evaluate,
+    events_to_wire,
+    shard_from_indices,
+    space_from_wire,
+)
+from ..core.fabric import read_frame, write_frame
+
+RESULT_BATCH = 8      # events per result frame: keeps cuts/best-so-far fresh
+
+
+def run_worker(address: str, *, result_batch: int = RESULT_BATCH) -> None:
+    """Serve leases from the fabric at ``address`` until it goes away."""
+    host, _, port = address.rpartition(":")
+    sock = socket.create_connection((host or "127.0.0.1", int(port)))
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    send_lock = threading.Lock()
+    write_frame(sock, {"t": "join", "pid": os.getpid(),
+                       "host": socket.gethostname()}, send_lock)
+
+    spaces: Dict[int, CandidateSpace] = {}
+    gates: Dict[int, CutGate] = {}
+    leases: "queue.Queue" = queue.Queue()
+
+    def reader() -> None:
+        # cuts and retirements apply IMMEDIATELY (mid-evaluation); only
+        # leases queue behind the current one
+        try:
+            while True:
+                msg = read_frame(sock)
+                t = msg.get("t")
+                if t == "space":
+                    sid = msg["solve_id"]
+                    spaces[sid] = space_from_wire(msg["payload"])
+                    gates[sid] = CutGate()
+                elif t == "lease":
+                    leases.put(msg)
+                elif t == "cuts":
+                    gate = gates.get(msg["solve_id"])
+                    if gate is not None:
+                        gate.update(msg["cuts"])
+                elif t == "retire":
+                    spaces.pop(msg["solve_id"], None)
+                    gate = gates.pop(msg["solve_id"], None)
+                    if gate is not None:
+                        gate.cancel()     # stop any straggling lease
+                elif t == "shutdown":
+                    break
+        except Exception:
+            # EOF, dead socket, or an undecodable frame: all mean this
+            # fabric is no longer usable from here
+            pass
+        finally:
+            # ALWAYS unblock the main loop -- a reader death must end
+            # the process, never hang it on leases.get()
+            leases.put(None)
+
+    threading.Thread(target=reader, daemon=True, name="fabric-reader").start()
+
+    while True:
+        msg = leases.get()
+        if msg is None:
+            break
+        sid, lid = msg["solve_id"], msg["lease_id"]
+        space, gate = spaces.get(sid), gates.get(sid)
+        try:
+            if space is None or gate is None:
+                # no space for this lease (solve retired while queued,
+                # or frames raced): NACK so the fabric REQUEUES the unit
+                # rather than counting it complete
+                write_frame(sock, {"t": "error", "lease_id": lid,
+                                   "error": f"no space for solve {sid}"},
+                            send_lock)
+                continue
+            gate.update(msg.get("cuts") or {})
+            shard = shard_from_indices(space, msg["indices"])
+            batch, evaluated = [], 0
+            for ev in evaluate(shard, gate=gate):
+                batch.append(ev)
+                evaluated += 1
+                if len(batch) >= result_batch:
+                    write_frame(sock, {"t": "results", "lease_id": lid,
+                                       "payload": events_to_wire(batch)},
+                                send_lock)
+                    batch = []
+            if batch:
+                write_frame(sock, {"t": "results", "lease_id": lid,
+                                   "payload": events_to_wire(batch)},
+                            send_lock)
+            write_frame(sock, {"t": "done", "lease_id": lid,
+                               "evaluated": evaluated}, send_lock)
+        except OSError:
+            break                         # fabric went away
+        except Exception as e:            # solver bug: report, keep serving
+            try:
+                write_frame(sock, {"t": "error", "lease_id": lid,
+                                   "error": repr(e)}, send_lock)
+            except OSError:
+                break
+    try:
+        sock.close()
+    except OSError:
+        pass
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="attach solve worker process(es) to a SolveFabric")
+    ap.add_argument("address", help="HOST:PORT the fabric listens on "
+                                    "(launch/serve.py --fabric prints it)")
+    ap.add_argument("--procs", type=int, default=1,
+                    help="worker processes to run from this invocation "
+                         "(each gets its own connection and lease window)")
+    args = ap.parse_args()
+    if args.procs <= 1:
+        run_worker(args.address)
+        return
+    import multiprocessing as mp
+
+    procs = [mp.Process(target=run_worker, args=(args.address,))
+             for _ in range(args.procs)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,10 @@ banked gather** (a single ``pallas_call`` over a stacked ``(slots, W)``
 index matrix) instead of one kernel launch per row-set -- the compiled
 resolution arithmetic runs in the kernel's scalar-prefetch index map
 either way, so the scheduler and the gather agree on the layout by
-construction.
+construction.  Writes go the same way: token records queue per tick and
+flush through **one batched banked scatter** (``artifact.scatter`` with
+per-slot column indices), so the resolution circuit -- not host-side
+index math -- places the rows on both paths.
 """
 
 from __future__ import annotations
@@ -196,6 +199,7 @@ class Server:
         self.pager = (KVPagePool(art, slots=max_batch)
                       if art is not None else None)
         self.kv_records = None    # bank-major (banks, vol, max_batch) int32
+        self._pending_records: List[tuple] = []   # (pos, slot, tok) queue
         self._gather_window = min(4, max_len)
         if art is not None:
             self._adopt_kv_artifact(art, records=None)
@@ -209,24 +213,36 @@ class Server:
     # -- banked token records ----------------------------------------------------
     def _adopt_kv_artifact(self, art: CompiledBankingPlan,
                            records) -> None:
-        """(Re)build the bank-major record table + resolve tables for a
-        (new) artifact; ``records`` carries logical rows across a swap."""
+        """(Re)build the bank-major record table for a (new) artifact;
+        ``records`` carries logical rows across a swap."""
         self._kv_art = art
         if records is None:
             records = jnp.zeros((self.max_len, self.max_batch), jnp.int32)
         self.kv_records = art.pack(records)
-        ba, bo = art.resolve(np.arange(self.max_len, dtype=np.int64))
-        self._kv_ba = np.broadcast_to(np.asarray(ba), (self.max_len,))
-        self._kv_bo = np.broadcast_to(np.asarray(bo), (self.max_len,))
 
     def _record(self, slot: int, tok: int) -> None:
-        """Write one token record at the slot's next position -- placed by
-        the artifact's resolution circuit (same layout the gather reads)."""
+        """Queue one token record at the slot's next position.  Records
+        land in the bank-major table at the next flush, placed by the
+        artifact's scatter kernel (same resolution circuit the gather
+        reads through)."""
         pos = int(self.positions[slot])
         if self.kv_records is not None and pos < self.max_len:
-            self.kv_records = self.kv_records.at[
-                int(self._kv_ba[pos]), int(self._kv_bo[pos]), slot].set(tok)
+            self._pending_records.append((pos, slot, int(tok)))
         self.positions[slot] = pos + 1
+
+    def _flush_records(self) -> None:
+        """Drain queued token records through ONE batched banked scatter
+        -- the write-path twin of the tick's batched gather.  The
+        artifact's BA/BO circuit places every row in the kernel's index
+        map; no host-side bank arithmetic."""
+        if not self._pending_records:
+            return
+        pend, self._pending_records = self._pending_records, []
+        rows = np.asarray([p for p, _, _ in pend], np.int64)
+        cols = np.asarray([s for _, s, _ in pend], np.int64)
+        vals = np.asarray([t for _, _, t in pend], np.int32)
+        self.kv_records = self._kv_art.scatter(self.kv_records, rows, vals,
+                                               col=cols)
 
     def _gather_next_tokens(self) -> Dict[int, int]:
         """Each active slot's decode input, via ONE batched banked gather.
@@ -236,6 +252,7 @@ class Server:
         all of them through the compiled BA/BO circuit.  The last column
         is the most recent record: the next decode input.
         """
+        self._flush_records()     # queued writes land before any read
         slots = sorted(self.active)
         W = self._gather_window
         rows = np.zeros((len(slots), W), np.int32)
@@ -259,6 +276,7 @@ class Server:
         repacked into the new one, the pager re-pages live slots, and
         the next tick's gather runs the new resolution circuit over
         identical logical records."""
+        self._flush_records()     # pending writes belong to the old layout
         flat = self._kv_art.unpack(self.kv_records)   # logical rows survive
         self._adopt_kv_artifact(art, records=flat)
         self.pager.swap(art)
@@ -358,6 +376,8 @@ class Server:
             del self.active[slot]
             if self.pager is not None:
                 self.pager.release(slot)
+        if self.kv_records is not None:
+            self._flush_records()   # this tick's records land this tick
         self.ticks += 1
 
     def run(self, max_ticks: int = 1000):
