@@ -356,6 +356,107 @@ def bench_solve_fabric(fast: bool = False) -> None:
         json.dump(out, f, indent=1)
 
 
+def bench_feedback_scorer(fast: bool = False) -> None:
+    """Measured-cost feedback loop: cold ml/static ranking vs the rank
+    after measurements contradict it, wall-clock from first observation
+    to the demotion re-solve, and the per-call gather cost with timing
+    hooks off (must be ~ the raw call) vs on.
+    Writes results/BENCH_feedback_scorer.json.
+    """
+    import numpy as np
+
+    from repro.core import (AccessDecl, Counter, Ctrl, FlatGeometry,
+                            MemorySpec, MemoryStore, PlanService, Program,
+                            Sched, compile_geometry)
+    from repro.core.polytope import Affine
+    from repro.core.solver import SolverOptions
+    from repro.core.telemetry import (MeasuredScorer, TelemetryConfig,
+                                      TelemetryLog, roofline_prior_seconds,
+                                      scheme_hash)
+
+    mem = MemorySpec("table", dims=(256,), word_bits=32, ports=1)
+    prog = Program(
+        root=Ctrl("reader", Sched.INNER,
+                  counters=[Counter("i", 0, 1, 32, par=8)],
+                  accesses=[AccessDecl("table", (Affine.of(i=1),))]),
+        memories={"table": mem},
+    )
+    out = {}
+    print("\n=== Feedback scorer (measure -> re-rank -> demote) ===")
+
+    # -- cold rank vs measured-refreshed rank ---------------------------
+    svc = PlanService(store=MemoryStore(), workers=1)
+    hub = svc.enable_telemetry(TelemetryConfig(min_observations=4,
+                                               flush_every=0))
+    plan = svc.submit(prog, "table",
+                      opts=SolverOptions(n_budget=8)).result(timeout=120)
+    sols = plan.solutions[:2]
+    assert len(sols) == 2, "need two candidate schemes"
+    log = TelemetryLog()
+    static = {scheme_hash(sols[0]): 1.0, scheme_hash(sols[1]): 2.0}
+    scorer = MeasuredScorer(log=log,
+                            static=lambda s: static[scheme_hash(s)])
+    cold = sorted(sols, key=scorer)
+    for _ in range(8):   # hardware says the cold winner is 10x slower
+        log.observe(plan.signature, scheme_hash(sols[0]), "numpy",
+                    "gather", (8,), 1e-3,
+                    prior=roofline_prior_seconds(sols[0]))
+        log.observe(plan.signature, scheme_hash(sols[1]), "numpy",
+                    "gather", (8,), 1e-4,
+                    prior=roofline_prior_seconds(sols[1]))
+    measured = sorted(sols, key=scorer)
+    out["cold_rank"] = [scheme_hash(s) for s in cold]
+    out["measured_rank"] = [scheme_hash(s) for s in measured]
+    out["rank_flipped"] = cold[0] is not measured[0]
+
+    # -- demotion latency: first observation -> speculative re-solve ----
+    art = svc.planner.compile(plan, backend="numpy")
+    hub.log.observe(plan.signature, "rival-scheme", "numpy", "gather",
+                    (8,), 1e-5)
+    t0 = time.perf_counter()
+    while svc.stats.demotions == 0:
+        hub.observe(art, "gather", (8,), 1e-3)
+    demote_us = (time.perf_counter() - t0) * 1e6
+    svc.drain(timeout=120)
+    resolve_s = time.perf_counter() - t0
+    out["demotion_latency_us"] = demote_us
+    out["demotion_resolve_s"] = resolve_s
+    out["observations_to_demote"] = svc.stats.observations
+
+    # -- per-call gather: hooks off must cost ~ the raw inner call ------
+    geo = FlatGeometry(N=4, B=16, alpha=(1,), P=(16,))
+    bare = compile_geometry(mem, geo, backend="numpy")
+    table = np.arange(256 * 2, dtype=np.int32).reshape(256, 2)
+    packed = np.asarray(bare.pack(table))
+    rows = np.arange(8)
+    iters = 50 if fast else 300
+    _, raw_us = _bench_callable(lambda: bare._gather(packed, rows),
+                                iters=iters, warmup=5)
+    _, off_us = _bench_callable(lambda: bare.gather(packed, rows),
+                                iters=iters, warmup=5)
+
+    class _Sink:
+        def observe(self, *a):
+            pass
+
+    bare.enable_telemetry(_Sink())
+    _, on_us = _bench_callable(lambda: bare.gather(packed, rows),
+                               iters=iters, warmup=5)
+    bare.disable_telemetry()
+    out["gather_raw_us"] = raw_us
+    out["gather_hooks_off_us"] = off_us
+    out["gather_hooks_on_us"] = on_us
+    out["hooks_off_overhead_us"] = off_us - raw_us
+
+    with open("results/BENCH_feedback_scorer.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"feedback_scorer,{demote_us:.0f},"
+          f"rank_flipped={out['rank_flipped']};"
+          f"resolve={resolve_s*1e3:.0f}ms;"
+          f"hooks_off_overhead={off_us - raw_us:.2f}us;"
+          f"hooks_on={on_us:.1f}us")
+
+
 BENCHES = {
     "solver": lambda fast: bench_solver(),
     "planner_cache": lambda fast: bench_planner_cache(),
@@ -363,6 +464,7 @@ BENCHES = {
     "plan_service": lambda fast: bench_plan_service(),
     "solver_shards": bench_solver_shards,
     "solve_fabric": bench_solve_fabric,
+    "feedback_scorer": bench_feedback_scorer,
     "kernels": lambda fast: bench_kernels(),
     "tables": bench_tables,
 }
@@ -387,6 +489,7 @@ def main() -> None:
     bench_plan_service()
     bench_solver_shards(args.fast)
     bench_solve_fabric(args.fast)
+    bench_feedback_scorer(args.fast)
     bench_kernels()
     bench_tables(args.fast)
 

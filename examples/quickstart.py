@@ -32,6 +32,16 @@ the same work units to **remote worker processes** over a socket
 they prune like local shards -- the last section below solves the same
 problem on two worker subprocesses and gets the identical winner.
 
+And the loop **closes on measurement**: ``service.enable_telemetry()``
+times every banked gather/scatter through the compiled artifacts,
+ranks plans with ``scorer="measured"`` (observed latency blended with
+the ML prediction, roofline prior for schemes never run), refreshes
+the persisted ML scorer from the accumulated measurements, and
+**demotes** a stored plan the measurements prove slow -- it loses its
+cache slot, a speculative re-solve runs, and a live server hot-swaps
+to the winner.  ``launch/serve.py --telemetry`` arms the same loop for
+real serving.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -130,6 +140,34 @@ def main():
     print(f"space    : {len(space)} candidates in "
           f"{len(space.sections)} sections -> "
           f"shards of {[len(s) for s in shards]}")
+
+    # MEASURE -> REFRESH -> DEMOTE: enable telemetry and the service
+    # times the artifacts it hands out, persists the observations
+    # through the plan store (telemetry/ sidecar under a DirectoryStore),
+    # and self-corrects rankings the hardware contradicts.
+    hub = service.enable_telemetry()
+    measured_plan = service.submit(program, "table",
+                                   scorer="measured").result(timeout=60)
+    m_art = service.planner.compile(measured_plan, backend="numpy")
+    packed = np.asarray(m_art.pack(np.asarray(flat)))
+    for _ in range(4):
+        m_art.gather(packed, np.asarray(idx))     # each call is measured
+    print(f"telemetry: {service.stats.observations} timed calls in the "
+          f"log ({len(hub.log)} distinct (scheme, op, shape) records)")
+    # the hardware disagrees with the ranking: a rival scheme measures
+    # 100x faster, and the served scheme keeps proving slow -> the
+    # service demotes it and re-solves speculatively, exactly once
+    hub.log.observe(measured_plan.signature, "rival-scheme", "numpy",
+                    "gather", (8,), 1e-5)
+    for _ in range(hub.config.min_observations):
+        hub.observe(m_art, "gather", (8,), 1e-3)
+    replacement = hub.replacement((measured_plan.signature, "measured"))
+    print(f"demotion : {service.stats.demotions} demoted, re-solve "
+          f"ticket={replacement.status if replacement else None} "
+          f"(a Server polls hub.replacement() and hot-swaps mid-serve)")
+    # with enough measured schemes, hub.refresh() refits the persisted
+    # ml_scorer.json from (features, measured-us) pairs -- the paper's
+    # ML cost model, now trained by your own hardware.
 
     # DISTRIBUTED: the identical search, but the shards run in OTHER
     # PROCESSES attached over a socket.  A SolveFabric leases work units

@@ -66,23 +66,36 @@ from .service import (
 )
 from .solver import BankingSolution, SolverOptions, solve, solve_monolithic
 from .store import DirectoryStore, MemoryStore, PlanStore
+from .telemetry import (
+    MeasuredCost,
+    MeasuredScorer,
+    ServiceTelemetry,
+    TelemetryConfig,
+    TelemetryLog,
+    default_telemetry_log,
+    roofline_prior_seconds,
+    scheme_hash,
+)
 from .grouping import build_groups
 
 __all__ = [
     "Access", "AccessDecl", "AccessGroup", "Affine", "BankingLayout",
     "BankingPlan", "BankingPlanner", "BankingSolution", "Candidate",
     "CandidateSpace", "CompiledBankingPlan", "Counter", "Ctrl", "CutGate",
-    "DirectoryStore", "FlatGeometry", "Iterator", "MemorySpec",
-    "MemoryStore", "MultiDimGeometry", "PlanRequest", "PlanService",
-    "PlanStore", "PlanTicket", "PreparedRequest", "Program", "Sched",
+    "DirectoryStore", "FlatGeometry", "Iterator", "MeasuredCost",
+    "MeasuredScorer", "MemorySpec", "MemoryStore", "MultiDimGeometry",
+    "PlanRequest", "PlanService", "PlanStore", "PlanTicket",
+    "PreparedRequest", "Program", "Sched", "ServiceTelemetry",
     "SolutionReducer", "SolveFabric", "SolveShard", "SolverOptions",
-    "StaleWhileRevalidate", "Unroll", "as_compiled", "build_groups",
-    "canonical_signature", "compile_geometry", "compile_plan",
-    "compile_solution", "compile_trivial", "default_planner",
-    "default_service", "evaluate", "evaluate_parallel",
+    "StaleWhileRevalidate", "TelemetryConfig", "TelemetryLog", "Unroll",
+    "as_compiled", "build_groups", "canonical_signature",
+    "compile_geometry", "compile_plan", "compile_solution",
+    "compile_trivial", "default_planner", "default_service",
+    "default_telemetry_log", "evaluate", "evaluate_parallel",
     "family_signature", "lane_compile", "program_signature",
     "rank_solutions", "register_scorer", "registered_scorers",
-    "resolve_scorer", "set_ml_scorer_path", "shard_from_indices", "solve",
+    "resolve_scorer", "roofline_prior_seconds", "scheme_hash",
+    "set_ml_scorer_path", "shard_from_indices", "solve",
     "solve_monolithic", "solve_space", "space_from_wire", "space_to_wire",
     "spawn_local_workers", "unroll",
 ]

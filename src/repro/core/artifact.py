@@ -32,6 +32,7 @@ the compiled artifact is the only execution interface.
 from __future__ import annotations
 
 import json
+import time
 import warnings
 from dataclasses import dataclass
 from pathlib import Path
@@ -165,6 +166,7 @@ class CompiledBankingPlan:
         self.scorer_name = scorer_name
         self.note = note
         self._tables_cache: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._telemetry = None   # opt-in timing sink (see enable_telemetry)
         self._lower()
 
     # -- lowering ----------------------------------------------------------
@@ -313,8 +315,51 @@ class CompiledBankingPlan:
         ba, bo = self._tables()
         return table[ba, bo]
 
+    # -- telemetry hooks ---------------------------------------------------
+    def enable_telemetry(self, sink) -> None:
+        """Attach a timing sink: every gather/scatter call is wall-timed
+        (result synchronized first) and reported as
+        ``sink.observe(self, op, index_shape, seconds)``.  The sink is
+        duck-typed -- normally a
+        :class:`~repro.core.telemetry.ServiceTelemetry` hub.  With no
+        sink attached (the default) the execution paths are untouched.
+        """
+        self._telemetry = sink
+
+    def disable_telemetry(self) -> None:
+        self._telemetry = None
+
+    def _timed(self, op: str, rows, fn):
+        sink = self._telemetry
+        if sink is None:
+            return fn()
+        t0 = time.perf_counter()
+        out = fn()
+        block = getattr(out, "block_until_ready", None)
+        if block is not None:
+            block()   # async dispatch would otherwise time the enqueue
+        sink.observe(self, op, np.shape(rows), time.perf_counter() - t0)
+        return out
+
     # -- execution ---------------------------------------------------------
     def gather(self, table, rows, *, interpret: Optional[bool] = None):
+        """Gather logical rows from bank-major storage.  With a telemetry
+        sink attached (:meth:`enable_telemetry`) the call is wall-timed
+        and the latency logged under this artifact's scheme."""
+        return self._timed("gather", rows,
+                           lambda: self._gather(table, rows,
+                                                interpret=interpret))
+
+    def scatter(self, table, rows, values, *, col=None,
+                interpret: Optional[bool] = None):
+        """Write logical rows into bank-major storage (see
+        :meth:`_scatter`); wall-timed when a telemetry sink is attached."""
+        return self._timed("scatter", rows,
+                           lambda: self._scatter(table, rows, values,
+                                                 col=col,
+                                                 interpret=interpret))
+
+    def _gather(self, table, rows, *, interpret: Optional[bool] = None):
         """Gather logical rows from bank-major storage.
 
         ``rows`` is a ``(T,)`` vector of flat logical addresses -- or a
@@ -357,8 +402,8 @@ class CompiledBankingPlan:
             return flat.reshape(T, R, flat.shape[-1])
         return banked_gather(table, rows, ba_fn, bo_fn, interpret=interpret)
 
-    def scatter(self, table, rows, values, *, col=None,
-                interpret: Optional[bool] = None):
+    def _scatter(self, table, rows, values, *, col=None,
+                 interpret: Optional[bool] = None):
         """Write logical rows into bank-major storage -- the write-path
         analogue of :meth:`gather`.
 

@@ -329,6 +329,17 @@ class MLScorer:
             score += self.weights.get(res, 1.0) * float(pipe.predict(x)[0])
         return score
 
+    def with_pipeline(self, name: str, pipeline,
+                      weight: float = 1.0) -> "MLScorer":
+        """A copy with one pipeline added/replaced -- how the telemetry
+        refresh grafts a measured-latency resource onto the static model
+        without mutating the shared instance."""
+        pipes = dict(self.pipelines)
+        pipes[name] = pipeline
+        weights = dict(self.weights)
+        weights[name] = float(weight)
+        return MLScorer(pipes, weights=weights)
+
     def to_json(self) -> dict:
         return {
             "format": "ml-scorer/v1",

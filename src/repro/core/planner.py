@@ -135,11 +135,18 @@ def set_ml_scorer_path(path: Optional[Union[str, Path]]) -> None:
 
     ``BankingPlanner(cache_dir=...)`` points this next to the plan cache
     (``cache_dir/ml_scorer.json``) so one process's training warm-starts
-    every later one; ``None`` disables persistence.
+    every later one; ``None`` disables persistence.  Switching to a
+    *different* path drops the cached scorer, so the next ``"ml"``
+    resolution loads (or trains for) the new location instead of serving
+    the first-loaded pipeline forever.
     """
     global _ML_SCORER_PATH
     with _ML_TRAIN_LOCK:
-        _ML_SCORER_PATH = Path(path) if path is not None else None
+        new = Path(path) if path is not None else None
+        if new != _ML_SCORER_PATH:
+            _ml_scorer_factory.__dict__.pop("_cached", None)
+            _ml_scorer_factory.__dict__.pop("_cached_mtime", None)
+        _ML_SCORER_PATH = new
 
 
 def _ml_scorer_factory() -> Callable:
@@ -147,11 +154,22 @@ def _ml_scorer_factory() -> Callable:
     otherwise train on a small synthetic corpus (heavy: one GBT pipeline
     per resource) and persist it next to the plan cache.
 
-    Cached for the process lifetime; the lock is held end-to-end so
-    concurrent planners share one model instead of each training their own.
+    Cached for the process lifetime -- but a persisted file whose mtime
+    advanced past the load (another process refreshed ``ml_scorer.json``
+    from measured telemetry) is reloaded, so refits propagate without a
+    restart.  The lock is held end-to-end so concurrent planners share one
+    model instead of each training their own.
     """
     with _ML_TRAIN_LOCK:
         cached = _ml_scorer_factory.__dict__.get("_cached")
+        if cached is not None and _ML_SCORER_PATH is not None:
+            known = _ml_scorer_factory.__dict__.get("_cached_mtime")
+            try:
+                disk = _ML_SCORER_PATH.stat().st_mtime_ns
+            except OSError:
+                disk = None
+            if known is not None and disk is not None and disk > known:
+                cached = None   # file refreshed on disk: reload below
         if cached is not None:
             return cached
         if _ML_SCORER_PATH is not None and _ML_SCORER_PATH.exists():
@@ -160,11 +178,13 @@ def _ml_scorer_factory() -> Callable:
             try:
                 scorer = MLScorer.from_json(
                     json.loads(_ML_SCORER_PATH.read_text()))
+                mtime = _ML_SCORER_PATH.stat().st_mtime_ns
             except (ValueError, KeyError, TypeError, json.JSONDecodeError,
                     OSError):
                 pass  # damaged/unreadable pipeline file: retrain below
             else:
                 _ml_scorer_factory.__dict__["_cached"] = scorer
+                _ml_scorer_factory.__dict__["_cached_mtime"] = mtime
                 return scorer
         scorer = _train_ml_scorer()
         if _ML_SCORER_PATH is not None:
@@ -173,6 +193,8 @@ def _ml_scorer_factory() -> Callable:
                 tmp = _ML_SCORER_PATH.with_suffix(".json.tmp")
                 tmp.write_text(json.dumps(scorer.to_json()))
                 tmp.replace(_ML_SCORER_PATH)
+                _ml_scorer_factory.__dict__["_cached_mtime"] = \
+                    _ML_SCORER_PATH.stat().st_mtime_ns
             except OSError:
                 pass  # persistence is best-effort; the in-memory cache holds
         return scorer
@@ -624,6 +646,9 @@ class BankingPlanner:
         self._scorer_pins: Dict[str, object] = {}
         self._lock = threading.Lock()
         self._service = None
+        # measured-cost hub (see PlanService.enable_telemetry): when set,
+        # every artifact compile() hands out is instrumented for timing
+        self.telemetry = None
         if self.cache_dir is not None:
             # trained "ml" pipelines persist next to the plan cache.
             # First planner with a cache_dir wins: a later throwaway
@@ -736,7 +761,7 @@ class BankingPlanner:
             hit = self._compiled.get(key)
         if hit is not None:
             self.stats.compile_hits += 1
-            return hit
+            return self._maybe_instrument(hit)
         if self.store is not None:
             art = self.store.get_artifact(plan.signature, plan.scorer_name,
                                           backend)
@@ -744,7 +769,7 @@ class BankingPlanner:
                 with self._lock:
                     self._compiled[key] = art
                 self.stats.compile_disk_hits += 1
-                return art
+                return self._maybe_instrument(art)
         art = compile_plan(plan, backend=backend)
         art.scorer_name = plan.scorer_name
         self.stats.compiles += 1
@@ -752,7 +777,29 @@ class BankingPlanner:
             self._compiled[key] = art
         if self.store is not None:
             self.store.put_artifact(art)
+        return self._maybe_instrument(art)
+
+    def _maybe_instrument(self, art: CompiledBankingPlan
+                          ) -> CompiledBankingPlan:
+        """Attach the telemetry hub's timing sink to an artifact we hand
+        out (no-op without an enabled hub)."""
+        if self.telemetry is not None:
+            self.telemetry.instrument(art)
         return art
+
+    def evict(self, signature: str, scorer_name: str) -> None:
+        """Forget a (signature, scorer) plan everywhere we cache it: the
+        in-memory plan cache, the compile cache, and the plan store --
+        demotion's eviction of a measured loser.  The next submit for the
+        signature cold-solves."""
+        with self._lock:
+            self._cache.pop(self._cache_key(signature, scorer_name), None)
+            prefix = f"{signature}/{scorer_name}/"
+            for key in [k for k in self._compiled
+                        if k.startswith(prefix)]:
+                self._compiled.pop(key, None)
+        if self.store is not None:
+            self.store.delete(signature, scorer_name)
 
     # -- planning ------------------------------------------------------------
     def signature(self, program: Program, memory: str,

@@ -223,6 +223,9 @@ class PlanTicket:
         art = compile_solution(sol, signature=self.signature,
                                backend=backend,
                                scorer_name=self.scorer_name)
+        hub = self._service.telemetry
+        if hub is not None:
+            hub.instrument(art)
         with self._lock:
             # keep only the newest version per backend: stale lowers
             # are dead weight once the best has moved on
@@ -304,6 +307,13 @@ class ServiceStats:
     fabric_requeues: int = 0  # leases requeued after worker death/timeout
     fabric_cut_broadcasts: int = 0  # cut snapshots pushed mid-flight
     fabric_workers_lost: int = 0
+    observations: int = 0    # measured gather/scatter/tick timings logged
+    refreshes: int = 0       # ml_scorer.json refits from measured pairs
+    demotions: int = 0       # stored plans evicted for measured slowness
+
+    def as_dict(self) -> Dict[str, int]:
+        """Counters as a plain dict (stats lines, JSON dumps)."""
+        return dict(vars(self))
 
 
 @dataclass
@@ -411,11 +421,30 @@ class PlanService:
         self._fabric = fabric
         self._shutdown = False
         self._lock = threading.Lock()
+        self.telemetry = None   # ServiceTelemetry hub (enable_telemetry)
 
     def attach_fabric(self, fabric) -> None:
         """Attach (or replace) the remote solve fabric backing the
         ``"fabric"`` executor."""
         self._fabric = fabric
+
+    def enable_telemetry(self, config=None, log=None):
+        """Turn on the measured-cost feedback loop.
+
+        Builds a :class:`~repro.core.telemetry.ServiceTelemetry` hub wired
+        to this service and its planner: artifacts the planner compiles
+        get timing hooks, answered plans are registered for demotion
+        watch, observations flush into the store's ``telemetry/`` sidecar,
+        and ``scorer="measured"`` submits rank on this service's own log.
+        Returns the hub (idempotent: repeated calls return the same one).
+        """
+        if self.telemetry is None:
+            from .telemetry import ServiceTelemetry
+            hub = ServiceTelemetry(service=self, planner=self.planner,
+                                   config=config, log=log)
+            self.telemetry = hub
+            self.planner.telemetry = hub
+        return self.telemetry
 
     # -- the front door ----------------------------------------------------------
     def submit(self, program, memory: Optional[str] = None, *,
@@ -463,6 +492,8 @@ class PlanService:
                 ticket = PlanTicket(service=self, prep=prep,
                                     priority=priority)
                 ticket._resolve(hit)
+                if self.telemetry is not None:
+                    self.telemetry.register(prep, hit)
                 return ticket
         ticket = PlanTicket(service=self, prep=prep, priority=priority,
                             shard_budget=shard_budget, executor=executor)
@@ -558,6 +589,10 @@ class PlanService:
         self.planner.stats.misses += 1
         space = self.planner.build_space(prep)
         _, scorer_fn = resolve_scorer(prep.scorer_spec)
+        if self.telemetry is not None:
+            # a "measured" scorer ranks on THIS service's observation log
+            scorer_fn = self.telemetry.adapt_scorer(prep.scorer_name,
+                                                    scorer_fn)
         reducer = SolutionReducer(space, scorer=scorer_fn)
         ticket._reducer = reducer
         executor = (ticket.executor if ticket.executor is not None
@@ -661,6 +696,8 @@ class PlanService:
                 self.stats.solved += 1
             ticket._resolve(plan)   # done flips first: best_so_far now
             ticket._release_reducer()  # reads the plan, so drop the search
+            if self.telemetry is not None:
+                self.telemetry.register(prep, plan)
         with self._lock:
             key = (prep.signature, prep.scorer_name)
             if self._inflight.get(key) is ticket:

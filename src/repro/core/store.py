@@ -104,6 +104,21 @@ class PlanStore(abc.ABC):
                     best = plan
         return best
 
+    # -- telemetry sidecar ------------------------------------------------------
+    def get_telemetry(self, signature: str) -> list:
+        """Persisted :class:`~repro.core.telemetry.MeasuredCost` records
+        for one plan signature ([] when the store keeps none)."""
+        return []
+
+    def merge_telemetry(self, signature: str, records) -> None:
+        """Fold observation *deltas* into the stored records for
+        ``signature`` (no-op for stores without telemetry support)."""
+
+    # -- demotion ---------------------------------------------------------------
+    def delete(self, signature: str, scorer_name: str) -> None:
+        """Drop a stored plan and its compiled artifacts -- how demotion
+        evicts a loser (no-op for stores without delete support)."""
+
 
 # ---------------------------------------------------------------------------
 # In-process store
@@ -116,6 +131,7 @@ class MemoryStore(PlanStore):
     def __init__(self):
         self._plans: Dict[Tuple[str, str], object] = {}
         self._artifacts: Dict[Tuple[str, str, str], CompiledBankingPlan] = {}
+        self._telemetry: Dict[str, Dict[tuple, object]] = {}
         self._lock = threading.Lock()
 
     def get(self, signature: str, scorer_name: str):
@@ -144,10 +160,33 @@ class MemoryStore(PlanStore):
         with self._lock:
             return list(self._artifacts.values())
 
+    def get_telemetry(self, signature: str) -> list:
+        with self._lock:
+            table = self._telemetry.get(signature, {})
+            return [rec.copy() for rec in table.values()]
+
+    def merge_telemetry(self, signature: str, records) -> None:
+        with self._lock:
+            table = self._telemetry.setdefault(signature, {})
+            for rec in records:
+                mine = table.get(rec.key)
+                if mine is None:
+                    table[rec.key] = rec.copy()
+                else:
+                    mine.merge(rec)
+
+    def delete(self, signature: str, scorer_name: str) -> None:
+        with self._lock:
+            self._plans.pop((signature, scorer_name), None)
+            for key in [k for k in self._artifacts
+                        if k[0] == signature and k[1] == scorer_name]:
+                self._artifacts.pop(key, None)
+
     def clear(self) -> None:
         with self._lock:
             self._plans.clear()
             self._artifacts.clear()
+            self._telemetry.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +332,80 @@ class DirectoryStore(PlanStore):
         path = self.artifact_path(artifact.signature, artifact.scorer_name,
                                   artifact.backend)
         self._write_locked(path, artifact.to_json())
+
+    # -- telemetry sidecar ------------------------------------------------------
+    def telemetry_path(self, signature: str) -> Path:
+        return self.path / "telemetry" / f"{signature}.json"
+
+    def get_telemetry(self, signature: str) -> list:
+        """Lock-free read of one signature's telemetry sidecar -- same
+        torn-JSON-is-a-miss discipline as plan reads."""
+        from .telemetry import TELEMETRY_FORMAT, MeasuredCost
+
+        p = self.telemetry_path(signature)
+        try:
+            d = json.loads(p.read_text())
+            if d.get("format") != TELEMETRY_FORMAT:
+                return []
+            return [MeasuredCost.from_json(r) for r in d["records"]]
+        except _MISS_ERRORS:
+            return []
+
+    def merge_telemetry(self, signature: str, records) -> None:
+        """Read-merge-write of the sidecar under the store lock, so two
+        processes flushing observations concurrently lose nothing.  A
+        torn sidecar is abandoned (observations are cheap to re-earn);
+        the merged write heals it."""
+        from .telemetry import TELEMETRY_FORMAT, MeasuredCost
+
+        records = list(records)
+        if not records:
+            return
+        path = self.telemetry_path(signature)
+        try:
+            with self._lock():
+                table: Dict[tuple, object] = {}
+                try:
+                    d = json.loads(path.read_text())
+                    if d.get("format") == TELEMETRY_FORMAT:
+                        for r in d["records"]:
+                            rec = MeasuredCost.from_json(r)
+                            table[rec.key] = rec
+                except _MISS_ERRORS:
+                    table = {}  # absent or torn: start fresh
+                for rec in records:
+                    mine = table.get(rec.key)
+                    if mine is None:
+                        table[rec.key] = rec.copy()
+                    else:
+                        mine.merge(rec)
+                payload = {"format": TELEMETRY_FORMAT,
+                           "records": [r.to_json() for r in table.values()]}
+                path.parent.mkdir(parents=True, exist_ok=True)
+                tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
+                tmp.write_text(json.dumps(payload))
+                tmp.replace(path)
+        except (TimeoutError, OSError):
+            pass  # best-effort, like every other durable write here
+
+    # -- demotion ---------------------------------------------------------------
+    def delete(self, signature: str, scorer_name: str) -> None:
+        """Unlink a plan and its compiled artifacts (demotion eviction).
+        The telemetry sidecar survives -- measurements stay evidence."""
+        try:
+            with self._lock():
+                try:
+                    self.plan_path(signature, scorer_name).unlink()
+                except OSError:
+                    pass
+                pattern = f"{signature}.{_safe(scorer_name)}.*.compiled.json"
+                for f in self.path.glob(pattern):
+                    try:
+                        f.unlink()
+                    except OSError:
+                        pass
+        except (TimeoutError, OSError):
+            pass
 
     @staticmethod
     def _touch(path: Path) -> None:

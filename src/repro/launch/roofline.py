@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
-
 """Roofline analysis (deliverable g).
 
 For every dry-run cell, derive the three roofline terms on TPU v5e:
@@ -26,6 +22,7 @@ import argparse
 import dataclasses
 import json
 import math
+import os
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -40,8 +37,22 @@ ICI_BW = 50e9           # bytes/s / link (1 effective link assumed)
 from ..configs import ARCH_IDS, SHAPES, get_arch
 from ..configs.base import ArchConfig, ShapeConfig
 from ..models import get_model
-from . import dryrun
 from .mesh import make_production_mesh
+
+
+def _force_dryrun_devices() -> None:
+    """Give XLA 512 host-platform devices for the dry-run sweep.
+
+    Only the CLI entry point (``main``) needs this; merely importing the
+    module for its analytic models / constants must NOT reconfigure jax
+    for every consumer -- and an XLA_FLAGS that already pins the device
+    count is left alone.
+    """
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=512")
 
 
 # ---------------------------------------------------------------------------
@@ -365,6 +376,7 @@ def analyze_cell(entry: Dict[str, Any], mesh, chips: int,
 
 
 def main():
+    _force_dryrun_devices()   # CLI-only; importing this module never does
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-json", default="results/dryrun_singlepod.json")
     ap.add_argument("--out", default="results/roofline.json")

@@ -54,6 +54,17 @@ def main():
                     help="block up to 30s for this many workers before "
                          "serving (0 = serve immediately; a fabric with no "
                          "workers falls back to the in-process pool)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="measured-cost feedback: time every banked "
+                         "gather/scatter and decode tick, rank the KV plan "
+                         "with scorer=\"measured\", persist observations "
+                         "in the plan store's telemetry/ sidecar, and "
+                         "demote + re-solve plans the measurements prove "
+                         "slow")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="print the service's stats counters (observations/"
+                         "refreshes/demotions included) every N seconds "
+                         "while serving (0 = off)")
     args = ap.parse_args()
 
     import numpy as np
@@ -91,11 +102,26 @@ def main():
                 print("fabric: workers did not attach in time; cold "
                       "solves fall back to the in-process pool")
     service = None
-    if store is not None or fabric is not None:
+    if store is not None or fabric is not None or args.telemetry:
         service = PlanService(
             store=store,
             executor="fabric" if fabric is not None else "pool",
             fabric=fabric)
+    if args.telemetry:
+        service.enable_telemetry()
+        print("telemetry: measured-cost feedback enabled "
+              "(scorer=measured, demotion armed)")
+    if args.stats_interval > 0 and service is not None:
+        import json as json_mod
+        import threading
+
+        def _stats_loop():
+            while True:
+                time.sleep(args.stats_interval)
+                print("stats:", json_mod.dumps(service.stats.as_dict()))
+
+        threading.Thread(target=_stats_loop, daemon=True,
+                         name="serve-stats").start()
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -107,7 +133,8 @@ def main():
     t_submit = time.perf_counter()
     ticket = page_ticket(cfg, max_len=args.max_len,
                          page=min(16, args.max_len // 4),
-                         readers=args.max_batch, service=service)
+                         readers=args.max_batch, service=service,
+                         scorer="measured" if args.telemetry else None)
     print(f"submitted KV-pool plan in "
           f"{(time.perf_counter() - t_submit) * 1e3:.2f} ms "
           f"(ticket: {ticket.status})")
@@ -141,6 +168,13 @@ def main():
               f"{service.stats.fabric_leases} leases, "
               f"{service.stats.fabric_cut_broadcasts} cut broadcasts, "
               f"{service.stats.fabric_requeues} requeues")
+    if args.telemetry and service is not None \
+            and service.telemetry is not None:
+        flushed = service.telemetry.flush()
+        s = service.stats
+        print(f"telemetry: {s.observations} observations "
+              f"({flushed} flushed at exit), {s.refreshes} scorer "
+              f"refreshes, {s.demotions} demotions")
     if fabric is not None:
         fabric.shutdown()
 

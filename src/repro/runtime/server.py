@@ -71,7 +71,8 @@ def _page_program(max_len: int, page: int, readers: int) -> Program:
 
 def page_ticket(cfg: ArchConfig, max_len: int, page: int = 128,
                 readers: int = 8, *,
-                service: Optional[PlanService] = None) -> PlanTicket:
+                service: Optional[PlanService] = None,
+                scorer=None) -> PlanTicket:
     """Submit the KV-pool banking problem (pages = banks); returns the
     :class:`PlanTicket` immediately.
 
@@ -79,13 +80,15 @@ def page_ticket(cfg: ArchConfig, max_len: int, page: int = 128,
     The server starts on ``ticket.fallback()`` (one bank = one page, no
     solver work) and hot-swaps to ``ticket.artifact()`` between ticks
     when the solve lands; a warm plan store answers before the ticket is
-    even returned.
+    even returned.  ``scorer="measured"`` ranks candidates on the
+    service's telemetry log (see ``PlanService.enable_telemetry``).
     """
     from ..core.solver import SolverOptions
     svc = service if service is not None else default_service()
     return svc.submit(
         _page_program(max_len, page, readers), "kv_pool",
-        opts=SolverOptions(b_candidates=(page, 1), allow_multidim=False))
+        opts=SolverOptions(b_candidates=(page, 1), allow_multidim=False),
+        scorer=scorer)
 
 
 def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,
@@ -179,6 +182,14 @@ class Server:
         self._params = model.init(jax.random.PRNGKey(0))
         self.cache = model.init_cache(max_batch, max_len)
         self._kv_ticket: Optional[PlanTicket] = None
+        self._kv_art: Optional[CompiledBankingPlan] = None
+        # demotion hot-swap: remember which service answered the KV plan
+        # (and under which key) so _maybe_swap_kv can poll its telemetry
+        # hub for a replacement ticket after the served plan is demoted
+        self._kv_service = (kv_plan._service
+                            if isinstance(kv_plan, PlanTicket) else None)
+        self._kv_key = ((kv_plan.signature, kv_plan.scorer_name)
+                        if isinstance(kv_plan, PlanTicket) else None)
         art: Optional[CompiledBankingPlan] = None
         if isinstance(kv_plan, PlanTicket):
             # serve NOW: solved artifact when already done, else fallback.
@@ -289,8 +300,22 @@ class Server:
         regresses, so each promotion strictly improves the layout); once
         the ticket resolves, the final solved artifact is swapped in --
         same winner the monolithic solver would have produced.
+
+        With telemetry enabled on the answering service, a served layout
+        the measurements demoted leaves a *replacement* re-solve ticket
+        on the hub; adopting it here closes the self-correction loop --
+        measure, demote, re-solve, hot-swap -- without the server ever
+        blocking.
         """
         t = self._kv_ticket
+        if t is None and self._kv_service is not None \
+                and self._kv_key is not None:
+            hub = getattr(self._kv_service, "telemetry", None)
+            if hub is not None:
+                t = hub.replacement(self._kv_key)
+                if t is not None:
+                    self._kv_ticket = t
+                    self._kv_best_version = 0
         if t is None:
             return
         if t.done():
@@ -349,6 +374,25 @@ class Server:
 
     # -- decode tick -------------------------------------------------------------
     def tick(self):
+        """One decode tick.  When the KV plan's service has telemetry
+        enabled, ticks that decoded (active slots) are wall-timed and
+        logged as ``op="tick"`` observations against the serving
+        artifact -- end-to-end evidence alongside the per-call
+        gather/scatter hooks."""
+        hub = getattr(self._kv_service, "telemetry", None)
+        art = self._kv_art
+        if hub is None or art is None or not art.signature:
+            self._tick()
+            return
+        import time
+        before = self.ticks
+        t0 = time.perf_counter()
+        self._tick()
+        if self.ticks > before:   # idle calls (nothing active) don't count
+            hub.observe(art, "tick", (self.max_batch,),
+                        time.perf_counter() - t0)
+
+    def _tick(self):
         self._maybe_swap_kv()
         self._admit()
         if not self.active:
