@@ -7,7 +7,6 @@ results JSONs.  Run after dryrun.py + roofline.py:
 from __future__ import annotations
 
 import json
-import sys
 
 
 def fmt_bytes(b: float) -> str:

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 
 
@@ -457,6 +456,71 @@ def bench_feedback_scorer(fast: bool = False) -> None:
           f"hooks_on={on_us:.1f}us")
 
 
+def bench_certify(fast: bool = False) -> None:
+    """Independent conflict-freedom certification over the Sec-4 suite:
+    per-plan certify latency (solver output re-decided pair-by-pair via
+    the lattice/residue path) plus the certificate re-check latency, and
+    the negative control -- a deliberately corrupted scheme MUST come
+    back with a concrete two-point counterexample, never a pass.
+    Writes results/BENCH_certify.json.
+    """
+    import dataclasses
+
+    from repro.analysis.certify import certify_plan, certify_solution, \
+        check_certificate
+    from repro.core import problems, unroll
+    from repro.core.planner import BankingPlanner
+
+    apps = (["denoise", "sobel", "sgd"] if fast
+            else list(problems.STENCILS) + ["sw", "spmv", "sgd"])
+    planner = BankingPlanner()
+    out = {}
+    print("\n=== Certifier (independent conflict-freedom re-decision) ===")
+    for app in apps:
+        prog = problems.build(app)
+        memname = list(prog.memories)[0]
+        plan = planner.plan(prog, memname, use_cache=False)
+        iters = unroll(prog).iterators
+        t0 = time.perf_counter()
+        res = certify_plan(plan, iters)
+        certify_us = (time.perf_counter() - t0) * 1e6
+        assert res.ok, f"{app}: solver/certifier disagreement: {res.reason}"
+        t0 = time.perf_counter()
+        ok, why = check_certificate(res.certificate)
+        recheck_us = (time.perf_counter() - t0) * 1e6
+        assert ok, f"{app}: certificate failed re-check: {why}"
+        out[app] = {
+            "certify_us": certify_us,
+            "recheck_us": recheck_us,
+            "pairs_checked": res.pairs_checked,
+            "scheme": plan.best.describe(),
+        }
+        print(f"certify_{app},{certify_us:.0f},"
+              f"pairs={res.pairs_checked};recheck={recheck_us:.0f}us")
+
+    # negative control: forge sobel's winner down to one bank -- every
+    # access now collides, and the certifier must SAY so concretely
+    prog = problems.build("sobel")
+    memname = list(prog.memories)[0]
+    plan = planner.plan(prog, memname, use_cache=False)
+    iters = unroll(prog).iterators
+    forged = dataclasses.replace(
+        plan.best, geometry=dataclasses.replace(plan.best.geometry,
+                                                N=1, B=1))
+    t0 = time.perf_counter()
+    res = certify_solution(forged, plan.groups, iters)
+    detect_us = (time.perf_counter() - t0) * 1e6
+    assert not res.ok and res.counterexample is not None, \
+        "corrupted scheme certified as conflict-free!"
+    out["corrupted_control"] = {
+        "detect_us": detect_us,
+        "counterexample": res.counterexample.describe(),
+    }
+    print(f"certify_corrupted_control,{detect_us:.0f},detected=True")
+    with open("results/BENCH_certify.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
 BENCHES = {
     "solver": lambda fast: bench_solver(),
     "planner_cache": lambda fast: bench_planner_cache(),
@@ -465,6 +529,7 @@ BENCHES = {
     "solver_shards": bench_solver_shards,
     "solve_fabric": bench_solve_fabric,
     "feedback_scorer": bench_feedback_scorer,
+    "certify": bench_certify,
     "kernels": lambda fast: bench_kernels(),
     "tables": bench_tables,
 }
@@ -490,6 +555,7 @@ def main() -> None:
     bench_solver_shards(args.fast)
     bench_solve_fabric(args.fast)
     bench_feedback_scorer(args.fast)
+    bench_certify(args.fast)
     bench_kernels()
     bench_tables(args.fast)
 

@@ -87,8 +87,7 @@ def table3() -> Dict:
 def fig11(n_splits: int = 10, seed: int = 0) -> Dict:
     """Cost-model learning curves: GBT pipeline vs tuned MLP, R^2 over
     10 random 70/30 splits (paper Sec 3.5.2 / Fig. 11)."""
-    from repro.core.cost_model import (GradientBoostedTrees, MLPBaseline,
-                                       ResourcePipeline, r2_score)
+    from repro.core.cost_model import MLPBaseline, ResourcePipeline, r2_score
     from repro.core.dataset import build_dataset
 
     ds = build_dataset(seed=seed)

@@ -6,7 +6,6 @@ banking-driven sharding, fault-tolerant trainer, checkpoints, data pipeline.
 """
 
 import argparse
-import dataclasses
 
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import DataConfig

@@ -19,14 +19,13 @@ is already in place); in this single-process container that is one file.
 
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import shutil
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np

@@ -18,7 +18,7 @@
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -27,14 +27,13 @@ from .planner import BankingPlan, BankingPlanner
 from .geometry import ConflictCache, FlatGeometry, MultiDimGeometry, \
     flat_conflict_edges, multidim_conflict_edges, _max_conflict_clique
 from .grouping import build_groups
-from .polytope import MemorySpec, linearize
+from .polytope import linearize
 from .solver import (
     BankingSolution,
     SolverOptions,
     _attach_flat,
     _attach_multidim,
-    n_candidates,
-    solve,
+    solve
 )
 
 import time

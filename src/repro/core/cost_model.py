@@ -14,11 +14,11 @@ two-hidden-layer ReLU net trained with Adam + early stopping.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .features import FEATURE_NAMES, extract_features, poly2_expand
+from .features import extract_features, poly2_expand
 
 # ---------------------------------------------------------------------------
 # Regression tree (depth-limited, quantile-threshold splits)

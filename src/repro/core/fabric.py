@@ -51,7 +51,7 @@ import sys
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .candidates import (
@@ -64,7 +64,12 @@ from .candidates import (
 )
 
 _LEN = struct.Struct("!I")
-_MAX_FRAME = 1 << 30          # sanity bound, not a security boundary
+# Hard ceiling audited BEFORE any allocation or unpickle: a corrupt or
+# hostile peer announcing a huge length prefix must not make the reader
+# allocate it.  64 MiB clears the biggest wired candidate space by two
+# orders of magnitude; raise via max_frame= on read_frame if a future
+# payload legitimately outgrows it.
+_MAX_FRAME = 64 << 20
 _WIRE_PROTO = pickle.HIGHEST_PROTOCOL
 
 
@@ -94,10 +99,13 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return buf
 
 
-def read_frame(sock: socket.socket) -> dict:
+def read_frame(sock: socket.socket,
+               max_frame: int = _MAX_FRAME) -> dict:
     (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
-    if n > _MAX_FRAME:
-        raise ValueError(f"frame of {n} bytes exceeds the wire bound")
+    if n > max_frame:
+        # audit the length prefix before allocating anything for it
+        raise ValueError(f"frame of {n} bytes exceeds the "
+                         f"{max_frame}-byte wire bound")
     return pickle.loads(_recv_exact(sock, n))
 
 
@@ -119,6 +127,7 @@ class FabricStats:
     local_evaluated: int = 0  # orphan units evaluated by the driving thread
     workers_joined: int = 0
     workers_lost: int = 0
+    cert_rejected: int = 0    # result batches refused by a solve's verifier
 
 
 @dataclass
@@ -132,6 +141,7 @@ class FabricReport:
     local_evaluated: int = 0
     workers_used: int = 0
     workers_lost: int = 0    # deaths of workers holding this solve's leases
+    cert_rejected: int = 0   # result batches refused by the verifier
 
 
 @dataclass
@@ -170,10 +180,11 @@ class _Worker:
 
 class _FabricSolve:
     def __init__(self, solve_id: int, space: CandidateSpace,
-                 reducer: SolutionReducer):
+                 reducer: SolutionReducer, verifier=None):
         self.solve_id = solve_id
         self.space = space
         self.reducer = reducer
+        self.verifier = verifier          # untrusted-result gate (or None)
         self.payload = space_to_wire(space)
         self.pending: deque = deque()
         self.outstanding: Dict[int, _Lease] = {}
@@ -327,8 +338,28 @@ class SolveFabric:
         if lease is None:
             return                        # late frame of a requeued lease
         solve = lease.solve
-        # reduce outside the fabric lock: scoring can be heavy
-        for ev in events_from_wire(msg["payload"]):
+        # decode + verify + reduce outside the fabric lock: certifying
+        # and scoring can be heavy
+        events = list(events_from_wire(msg["payload"]))
+        if solve.verifier is not None:
+            rejection = solve.verifier(events)
+            if rejection is not None:
+                # untrusted result failed certification: drop the whole
+                # batch, take the lease away, and requeue its unit with
+                # this worker excluded -- the unit re-runs elsewhere (or
+                # locally on the driving thread), so the solve still
+                # converges to the exact monolithic answer
+                with self._cond:
+                    solve.report.cert_rejected += 1
+                    self.stats.cert_rejected += 1
+                    live = self._leases.pop(lease.lease_id, None)
+                    if live is not None:
+                        worker.outstanding.pop(lease.lease_id, None)
+                        self._requeue(live)
+                        self._pump()
+                        self._cond.notify_all()
+                return
+        for ev in events:
             solve.reducer.add(ev)
         self._publish_cuts(solve)
 
@@ -514,13 +545,22 @@ class SolveFabric:
     # -- the driver -----------------------------------------------------------
     def solve(self, space: CandidateSpace, *,
               reducer: Optional[SolutionReducer] = None,
-              scorer=None, chunk: Optional[int] = None) -> FabricReport:
+              scorer=None, chunk: Optional[int] = None,
+              verifier=None) -> FabricReport:
         """Evaluate ``space`` across the attached workers, merging every
         stream into ``reducer`` (one is created when omitted -- read the
         merged result off ``reducer.finalize()``).  Blocks until every
         candidate is accounted for; the calling thread doubles as the
         fallback evaluator for units no live worker may take, so the
         solve converges even if every worker dies mid-flight.
+
+        ``verifier`` gates every remote result batch before it reaches
+        the reducer: called with the decoded event list, ``None`` means
+        accept, anything else rejects the batch and requeues its unit
+        away from the sending worker (``FabricReport.cert_rejected``).
+        Locally evaluated orphan units bypass it -- they never crossed
+        the trust boundary.  Build one with
+        ``repro.analysis.make_batch_verifier(space)``.
         """
         red = reducer if reducer is not None else SolutionReducer(
             space, scorer=scorer)
@@ -529,7 +569,8 @@ class SolveFabric:
         # encoding the space (pickle + zlib) can take a while for big
         # problems: do it before touching the fabric lock so concurrent
         # solves' result intake and dispatch never stall behind it
-        solve = _FabricSolve(self._next_solve(), space, red)
+        solve = _FabricSolve(self._next_solve(), space, red,
+                             verifier=verifier)
         for lo in range(0, n, step):
             solve.pending.append(
                 _Unit(indices=tuple(range(lo, min(lo + step, n)))))

@@ -14,7 +14,7 @@ enforced later by Def 2.9.
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 from .controller import UnrolledProgram, is_concurrent
 from .polytope import AccessGroup

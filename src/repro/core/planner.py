@@ -872,12 +872,17 @@ class BankingPlanner:
 
     def complete_solve(self, prep: PreparedRequest, solutions:
                        List[BankingSolution], solve_seconds: float,
-                       scorer_fn: Optional[Callable] = None
+                       scorer_fn: Optional[Callable] = None,
+                       verify: Optional[Callable] = None
                        ) -> BankingPlan:
         """Rank merged solutions, build the plan, cache, persist.
 
         The back half of every solve: the sharded service reducer and
-        the in-thread ``solve_prepared`` both end here."""
+        the in-thread ``solve_prepared`` both end here.  ``verify`` is
+        the service's certify-before-cache hook: called with
+        ``(plan, prep)`` before anything is cached or persisted, and a
+        raise (``repro.analysis.CertificationError``) aborts both --
+        an uncertified scheme never enters the cache or the store."""
         if scorer_fn is None:
             _, scorer_fn = resolve_scorer(prep.scorer_spec)
         ranked = rank_solutions(solutions, scorer_fn)
@@ -896,6 +901,8 @@ class BankingPlanner:
             groups=prep.groups,
             family=prep.family,
         )
+        if verify is not None:
+            verify(plan, prep)
         with self._lock:
             self._cache[self._cache_key(prep.signature,
                                         prep.scorer_name)] = plan

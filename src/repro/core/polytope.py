@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from functools import reduce
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

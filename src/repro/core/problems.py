@@ -13,7 +13,7 @@ corpus is this suite plus randomized variants -- see core/dataset.py).
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 from .controller import AccessDecl, Counter, Ctrl, Program, Sched
 from .polytope import Affine, MemorySpec

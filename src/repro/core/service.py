@@ -116,7 +116,7 @@ class PlanTicket:
 
     def __init__(self, *, service: "PlanService", prep: PreparedRequest,
                  priority: int = 0, shard_budget: Optional[int] = None,
-                 executor: Optional[str] = None):
+                 executor: Optional[str] = None, verify: str = "off"):
         self._service = service
         self._prep = prep
         self.memory = prep.memory
@@ -126,6 +126,7 @@ class PlanTicket:
         self.priority = priority
         self.shard_budget = shard_budget
         self.executor = executor     # None = the service default
+        self.verify = verify         # resolved verification mode
         self.submitted_at = time.time()
         self.status = "queued"
         self._event = threading.Event()
@@ -310,6 +311,10 @@ class ServiceStats:
     observations: int = 0    # measured gather/scatter/tick timings logged
     refreshes: int = 0       # ml_scorer.json refits from measured pairs
     demotions: int = 0       # stored plans evicted for measured slowness
+    certified: int = 0       # schemes independently certified before caching
+    cert_failures: int = 0   # solver outputs refused by the certifier
+    cert_rejected: int = 0   # fabric result batches rejected + requeued
+    lint_errors: int = 0     # submits refused by the pre-solve lint pass
 
     def as_dict(self) -> Dict[str, int]:
         """Counters as a plain dict (stats lines, JSON dumps)."""
@@ -358,6 +363,16 @@ _SENTINEL = None
 
 EXECUTORS = ("pool", "fabric")
 
+# Static-verification modes (repro.analysis):
+#   "off"   -- trust the solver (the historical behavior);
+#   "store" -- lint programs before queueing, certify solver output
+#              before it is cached/persisted, persist the certificate
+#              beside the plan, re-verify store entries on hydrate;
+#   "all"   -- "store" plus certification of every solution batch a
+#              fabric worker streams back (bad batches are rejected and
+#              their units requeued away from the sender).
+VERIFY_MODES = ("off", "store", "all")
+
 
 class PlanService:
     """submit/await planning: a priority queue of banking problems drained
@@ -393,13 +408,22 @@ class PlanService:
                  revalidate: Optional[StaleWhileRevalidate] = None,
                  shard_budget: Optional[int] = None,
                  executor: str = "pool",
-                 fabric=None):
+                 fabric=None,
+                 verify: str = "off"):
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; one of {EXECUTORS}")
+        if verify not in VERIFY_MODES:
+            raise ValueError(
+                f"unknown verify mode {verify!r}; one of {VERIFY_MODES}")
         if planner is None:
             planner = BankingPlanner(store=as_store(store))
         self.planner = planner
+        self.verify = verify
+        if verify != "off" and planner.store is not None \
+                and hasattr(planner.store, "verify_hydrated"):
+            # an armed service refuses to serve uncertified disk entries
+            planner.store.verify_hydrated = True
         # claim the planner's inline-service slot when it's free, so
         # planner.plan() (= submit().result()) shares this queue/workers
         with planner._lock:
@@ -453,7 +477,8 @@ class PlanService:
                use_cache: bool = True,
                priority: int = 0,
                shard_budget: Optional[int] = None,
-               executor: Optional[str] = None) -> PlanTicket:
+               executor: Optional[str] = None,
+               verify: Optional[str] = None) -> PlanTicket:
         """Pose one banking problem; returns a :class:`PlanTicket`.
 
         Runs unroll + grouping + signature + cache probe inline (bad
@@ -464,12 +489,19 @@ class PlanService:
         itself defaulting to an adaptive per-problem fan-out) -- or, with
         ``executor="fabric"``, across the attached remote solve workers.
         Lower ``priority`` solves first.
+
+        ``verify`` ("off" | "store" | "all", default: the service's
+        mode) arms the static verification layer for this submit: the
+        program is linted before queueing (lint errors raise
+        ``repro.analysis.LintError`` here), solver output is
+        independently certified before it is cached or persisted, and
+        with "all" every fabric result batch is certified on intake.
         """
         prep = self.planner.prepare(program, memory, opts=opts,
                                     scorer=scorer, use_cache=use_cache)
         return self.submit_prepared(prep, priority=priority,
                                     shard_budget=shard_budget,
-                                    executor=executor)
+                                    executor=executor, verify=verify)
 
     def submit_request(self, request: PlanRequest, *,
                        priority: int = 0) -> PlanTicket:
@@ -479,24 +511,35 @@ class PlanService:
     def submit_prepared(self, prep: PreparedRequest, *,
                         priority: int = 0,
                         shard_budget: Optional[int] = None,
-                        executor: Optional[str] = None) -> PlanTicket:
+                        executor: Optional[str] = None,
+                        verify: Optional[str] = None) -> PlanTicket:
         if executor is not None and executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; one of {EXECUTORS}")
+        if verify is not None and verify not in VERIFY_MODES:
+            raise ValueError(
+                f"unknown verify mode {verify!r}; one of {VERIFY_MODES}")
+        verify = verify if verify is not None else self.verify
         self.stats.submits += 1
+        if verify != "off":
+            # lint before anything queues: problems no banking can fix
+            # (OOB accesses, colliding Syms, oversubscribed ports) must
+            # fail the submit, not burn a solve
+            self._lint_gate(prep)
         key = (prep.signature, prep.scorer_name)
         if prep.request.use_cache:
             hit = self.planner.lookup(prep)
             if hit is not None:
                 self.stats.sync_hits += 1
                 ticket = PlanTicket(service=self, prep=prep,
-                                    priority=priority)
+                                    priority=priority, verify=verify)
                 ticket._resolve(hit)
                 if self.telemetry is not None:
                     self.telemetry.register(prep, hit)
                 return ticket
         ticket = PlanTicket(service=self, prep=prep, priority=priority,
-                            shard_budget=shard_budget, executor=executor)
+                            shard_budget=shard_budget, executor=executor,
+                            verify=verify)
         if prep.request.use_cache:
             # atomic check-and-register: concurrent submits of the same
             # (signature, scorer) must share ONE solve
@@ -536,6 +579,50 @@ class PlanService:
         with self._lock:
             self._trivial[key] = art
         return art
+
+    # -- static verification (repro.analysis) ------------------------------------
+    def _lint_gate(self, prep: PreparedRequest) -> None:
+        """Refuse submits whose Program fails the lint pass (raises
+        :class:`repro.analysis.LintError` on error-severity findings)."""
+        from ..analysis.lint import LintError, lint_program
+        report = lint_program(prep.request.program, prep.memory)
+        if not report.ok:
+            with self._lock:
+                self.stats.lint_errors += 1
+            raise LintError(report)
+
+    def _make_verifier(self, mode: str):
+        """The certify-before-cache callback handed to
+        ``BankingPlanner.complete_solve`` (``None`` when verification is
+        off).  Failed certification bumps ``cert_failures`` and raises
+        :class:`repro.analysis.CertificationError` -- the plan is never
+        cached or persisted, and the ticket surfaces the counterexample
+        through ``result()``.  Success bumps ``certified`` and persists
+        the certificate beside the plan when the store keeps them."""
+        if mode == "off":
+            return None
+
+        def verify(plan: BankingPlan, prep: PreparedRequest) -> None:
+            from ..analysis.certify import CertificationError, certify_plan
+            res = certify_plan(plan, prep.iterators,
+                               scorer=prep.scorer_name)
+            if not res.ok:
+                with self._lock:
+                    self.stats.cert_failures += 1
+                why = (res.counterexample.describe()
+                       if res.counterexample is not None else res.reason)
+                raise CertificationError(
+                    f"solver output failed independent certification: "
+                    f"{why}", res.counterexample)
+            with self._lock:
+                self.stats.certified += 1
+            if res.certificate is not None \
+                    and self.planner.store is not None:
+                self.planner.store.put_certificate(
+                    plan.signature, plan.scorer_name,
+                    res.certificate.to_json())
+
+        return verify
 
     # -- worker pool ----------------------------------------------------------------
     def _ensure_workers(self) -> None:
@@ -620,7 +707,8 @@ class PlanService:
                             remaining=len(shards))
         if not shards:   # empty candidate space: resolve immediately
             self._finish(ticket, prep, plan=self.planner.complete_solve(
-                prep, [], 0.0, scorer_fn))
+                prep, [], 0.0, scorer_fn,
+                verify=self._make_verifier(ticket.verify)))
             return
         with self._lock:
             self.stats.shards_spawned += len(shards)
@@ -639,16 +727,25 @@ class PlanService:
         started = time.perf_counter()
         with self._lock:
             self.stats.fabric_solves += 1
+        verifier = None
+        if ticket.verify == "all":
+            # certify every solution batch the untrusted workers stream
+            # back; bad batches are rejected + requeued by the fabric
+            from ..analysis.certify import make_batch_verifier
+            verifier = make_batch_verifier(space)
         try:
-            report = fabric.solve(space, reducer=reducer)
+            report = fabric.solve(space, reducer=reducer,
+                                  verifier=verifier)
             plan = self.planner.complete_solve(
                 prep, reducer.finalize(),
-                time.perf_counter() - started, scorer_fn)
+                time.perf_counter() - started, scorer_fn,
+                verify=self._make_verifier(ticket.verify))
             with self._lock:
                 self.stats.fabric_leases += report.leases
                 self.stats.fabric_requeues += report.requeues
                 self.stats.fabric_cut_broadcasts += report.cut_broadcasts
                 self.stats.fabric_workers_lost += report.workers_lost
+                self.stats.cert_rejected += report.cert_rejected
                 self.stats.best_promotions += reducer.promotions
                 self.stats.dedup_hits += reducer.dedup_hits
         except BaseException as e:
@@ -673,7 +770,8 @@ class PlanService:
                 red = state.reducer
                 plan = self.planner.complete_solve(
                     state.prep, red.finalize(),
-                    time.perf_counter() - state.started, state.scorer_fn)
+                    time.perf_counter() - state.started, state.scorer_fn,
+                    verify=self._make_verifier(state.ticket.verify))
                 with self._lock:
                     self.stats.best_promotions += red.promotions
                     self.stats.dedup_hits += red.dedup_hits

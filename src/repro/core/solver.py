@@ -40,11 +40,10 @@ from .geometry import (
 from .polytope import (
     Access,
     AccessGroup,
-    Affine,
     Iterator,
     MemorySpec,
     linearize,
-    reachable_residues,
+    reachable_residues
 )
 from .resources import SchemeResources, estimate_scheme
 from .transforms import (

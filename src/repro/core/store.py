@@ -114,6 +114,17 @@ class PlanStore(abc.ABC):
         """Fold observation *deltas* into the stored records for
         ``signature`` (no-op for stores without telemetry support)."""
 
+    # -- certificate sidecar ----------------------------------------------------
+    def get_certificate(self, signature: str, scorer_name: str):
+        """Persisted conflict certificate for one plan (``None`` when the
+        store keeps none)."""
+        return None
+
+    def put_certificate(self, signature: str, scorer_name: str,
+                        cert: dict) -> None:
+        """Persist a conflict certificate beside its plan (no-op for
+        stores without certificate support)."""
+
     # -- demotion ---------------------------------------------------------------
     def delete(self, signature: str, scorer_name: str) -> None:
         """Drop a stored plan and its compiled artifacts -- how demotion
@@ -132,6 +143,7 @@ class MemoryStore(PlanStore):
         self._plans: Dict[Tuple[str, str], object] = {}
         self._artifacts: Dict[Tuple[str, str, str], CompiledBankingPlan] = {}
         self._telemetry: Dict[str, Dict[tuple, object]] = {}
+        self._certs: Dict[Tuple[str, str], dict] = {}
         self._lock = threading.Lock()
 
     def get(self, signature: str, scorer_name: str):
@@ -175,9 +187,19 @@ class MemoryStore(PlanStore):
                 else:
                     mine.merge(rec)
 
+    def get_certificate(self, signature: str, scorer_name: str):
+        with self._lock:
+            return self._certs.get((signature, scorer_name))
+
+    def put_certificate(self, signature: str, scorer_name: str,
+                        cert: dict) -> None:
+        with self._lock:
+            self._certs[(signature, scorer_name)] = cert
+
     def delete(self, signature: str, scorer_name: str) -> None:
         with self._lock:
             self._plans.pop((signature, scorer_name), None)
+            self._certs.pop((signature, scorer_name), None)
             for key in [k for k in self._artifacts
                         if k[0] == signature and k[1] == scorer_name]:
                 self._artifacts.pop(key, None)
@@ -187,6 +209,7 @@ class MemoryStore(PlanStore):
             self._plans.clear()
             self._artifacts.clear()
             self._telemetry.clear()
+            self._certs.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -269,13 +292,22 @@ class DirectoryStore(PlanStore):
     ``sweep()`` garbage-collects entries written under a stale
     ``SIGNATURE_VERSION`` -- their signatures can never be probed again,
     so they are dead weight after a version bump.
+
+    Conflict certificates live in a ``certs/`` sidecar (same layout as
+    ``telemetry/``, outside the LRU cap).  With ``verify_hydrated=True``
+    -- what a ``PlanService`` armed with ``verify=`` sets -- every plan
+    hydrated from disk must come with a certificate that re-checks and
+    matches the plan's scheme; anything else reads as a miss and
+    re-solves, so a poisoned or pre-verification entry can never serve.
     """
 
     LOCK_NAME = ".store.lock"
 
     def __init__(self, path: Union[str, Path], *, lock_timeout: float = 10.0,
                  lock_stale_seconds: float = 30.0,
-                 max_bytes: Optional[int] = None):
+                 max_bytes: Optional[int] = None,
+                 verify_hydrated: bool = False):
+        self.verify_hydrated = verify_hydrated
         self.path = Path(path)
         self.path.mkdir(parents=True, exist_ok=True)
         self._lock_timeout = lock_timeout
@@ -310,8 +342,22 @@ class DirectoryStore(PlanStore):
             plan = BankingPlan.from_json(json.loads(p.read_text()))
         except _MISS_ERRORS:
             return None  # absent, torn, or foreign file: a miss
+        if self.verify_hydrated and not self._hydrate_verified(plan):
+            return None  # unverifiable entry: treat as a miss, re-solve
         self._touch(p)
         return plan
+
+    def _hydrate_verified(self, plan) -> bool:
+        """Re-verify a hydrated plan against its persisted certificate."""
+        if plan.best is None:
+            return True  # failed solves carry no scheme to refute
+        cert = self.get_certificate(plan.signature, plan.scorer_name)
+        if cert is None:
+            return False
+        from ..analysis.certify import (certificate_matches_plan,
+                                        check_certificate)
+        ok, _reason = check_certificate(cert)
+        return ok and certificate_matches_plan(cert, plan)
 
     def put(self, plan) -> None:
         path = self.plan_path(plan.signature, plan.scorer_name)
@@ -388,14 +434,47 @@ class DirectoryStore(PlanStore):
         except (TimeoutError, OSError):
             pass  # best-effort, like every other durable write here
 
+    # -- certificate sidecar ----------------------------------------------------
+    def certificate_path(self, signature: str, scorer_name: str) -> Path:
+        return (self.path / "certs"
+                / f"{signature}.{_safe(scorer_name)}.json")
+
+    def get_certificate(self, signature: str, scorer_name: str):
+        """Lock-free read of one plan's certificate sidecar -- torn or
+        foreign JSON reads as None, same discipline as plan reads."""
+        p = self.certificate_path(signature, scorer_name)
+        try:
+            return json.loads(p.read_text())
+        except _MISS_ERRORS:
+            return None
+
+    def put_certificate(self, signature: str, scorer_name: str,
+                        cert: dict) -> None:
+        """Atomic tmp+rename write under the store lock, mirroring the
+        telemetry sidecar (certs/ sits outside the LRU byte cap)."""
+        path = self.certificate_path(signature, scorer_name)
+        try:
+            with self._lock():
+                path.parent.mkdir(parents=True, exist_ok=True)
+                tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
+                tmp.write_text(json.dumps(cert, indent=1, sort_keys=True))
+                tmp.replace(path)
+        except (TimeoutError, OSError):
+            pass  # best-effort, like every other durable write here
+
     # -- demotion ---------------------------------------------------------------
     def delete(self, signature: str, scorer_name: str) -> None:
         """Unlink a plan and its compiled artifacts (demotion eviction).
-        The telemetry sidecar survives -- measurements stay evidence."""
+        The telemetry sidecar survives -- measurements stay evidence;
+        the certificate goes with the scheme it certified."""
         try:
             with self._lock():
                 try:
                     self.plan_path(signature, scorer_name).unlink()
+                except OSError:
+                    pass
+                try:
+                    self.certificate_path(signature, scorer_name).unlink()
                 except OSError:
                     pass
                 pattern = f"{signature}.{_safe(scorer_name)}.*.compiled.json"

@@ -23,7 +23,7 @@ shorten the hot index-arithmetic path on TPU too, not only on FPGAs.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 # ---------------------------------------------------------------------------

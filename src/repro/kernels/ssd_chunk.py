@@ -16,12 +16,10 @@ Oracle: ref.ssd_chunk_reference == one scan step of models.ssm.ssd_chunked.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import tpu_compiler_params
 

@@ -21,7 +21,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import math
 import os
 import time
 import traceback
@@ -34,7 +33,7 @@ PEAK_FLOPS = 197e12     # bf16 / chip
 HBM_BW = 819e9          # bytes/s / chip
 ICI_BW = 50e9           # bytes/s / link (1 effective link assumed)
 
-from ..configs import ARCH_IDS, SHAPES, get_arch
+from ..configs import SHAPES, get_arch
 from ..configs.base import ArchConfig, ShapeConfig
 from ..models import get_model
 from .mesh import make_production_mesh

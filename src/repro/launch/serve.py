@@ -61,6 +61,14 @@ def main():
                          "in the plan store's telemetry/ sidecar, and "
                          "demote + re-solve plans the measurements prove "
                          "slow")
+    ap.add_argument("--verify", choices=("off", "store", "all"),
+                    default="off",
+                    help="static verification: lint the KV-pool program "
+                         "before solving and certify solver output before "
+                         "it is cached (certificates persist beside stored "
+                         "plans, which re-verify on hydrate); \"all\" also "
+                         "certifies every result batch remote fabric "
+                         "workers stream back, rejecting forged ones")
     ap.add_argument("--stats-interval", type=float, default=0.0,
                     help="print the service's stats counters (observations/"
                          "refreshes/demotions included) every N seconds "
@@ -102,11 +110,17 @@ def main():
                 print("fabric: workers did not attach in time; cold "
                       "solves fall back to the in-process pool")
     service = None
-    if store is not None or fabric is not None or args.telemetry:
+    if store is not None or fabric is not None or args.telemetry \
+            or args.verify != "off":
         service = PlanService(
             store=store,
             executor="fabric" if fabric is not None else "pool",
-            fabric=fabric)
+            fabric=fabric,
+            verify=args.verify)
+    if args.verify != "off":
+        print(f"verification armed ({args.verify}): lint gate + "
+              f"independent conflict certification"
+              + (" + fabric batch checking" if args.verify == "all" else ""))
     if args.telemetry:
         service.enable_telemetry()
         print("telemetry: measured-cost feedback enabled "
@@ -168,6 +182,11 @@ def main():
               f"{service.stats.fabric_leases} leases, "
               f"{service.stats.fabric_cut_broadcasts} cut broadcasts, "
               f"{service.stats.fabric_requeues} requeues")
+    if args.verify != "off" and service is not None:
+        s = service.stats
+        print(f"verification: {s.certified} certified, "
+              f"{s.cert_failures} refused, {s.cert_rejected} fabric "
+              f"batches rejected, {s.lint_errors} lint refusals")
     if args.telemetry and service is not None \
             and service.telemetry is not None:
         flushed = service.telemetry.flush()

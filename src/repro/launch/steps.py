@@ -2,13 +2,10 @@
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ArchConfig, ShapeConfig
 from ..models import Model
 from ..optim import adamw
 

@@ -18,10 +18,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
-import jax
-import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from . import encdec, hybrid, moe, ssm, transformer as tfm

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..parallel.hints import hint
-from .layers import dense_init, rms_norm, split_keys, swiglu
+from .layers import dense_init, rms_norm, split_keys
 from . import ssm as ssm_mod
 from . import transformer as tfm
 

@@ -12,8 +12,7 @@ and is validated against the same reference; ``attn_impl`` selects it.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

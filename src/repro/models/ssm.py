@@ -13,7 +13,6 @@ banks the (H, P, N) state across the model axis.
 
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax

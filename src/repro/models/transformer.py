@@ -13,9 +13,7 @@ residual stream only.
 
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,9 +9,8 @@ from ``zero1_specs``; the trainer installs them as out_shardings.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ alternative for slower inter-pod links (DESIGN.md Sec 5).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

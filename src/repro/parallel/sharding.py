@@ -27,9 +27,8 @@ from __future__ import annotations
 import functools
 from typing import Any, Dict, Optional, Sequence, Tuple
 
-import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.artifact import CompiledBankingPlan, lane_compile

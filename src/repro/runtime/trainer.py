@@ -18,7 +18,7 @@ Production behaviors, all exercised by tests:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..ckpt.manager import CheckpointManager
-from ..data.pipeline import DataConfig, PrefetchingLoader, get_batch
+from ..data.pipeline import DataConfig, PrefetchingLoader
 from ..models import Model
 from ..optim import adamw
 from ..launch import steps as steps_mod

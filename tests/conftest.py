@@ -1,0 +1,35 @@
+"""Shared fixtures: certifier counterexamples auto-render as pytest
+cases.
+
+When the independent certifier (``repro.analysis.certify``) refutes a
+scheme, its :class:`Counterexample` carries everything needed to replay
+the collision.  The ``render_counterexample`` fixture turns one into an
+importable test file under the pytest tmp dir and executes it, so any
+solver/certifier disagreement found during a run can be frozen into the
+suite as a reproducible case instead of a log line.
+"""
+
+import importlib.util
+
+import pytest
+
+
+def _render_counterexample(cex, tmp_path, name="test_rendered_cex"):
+    """Write ``cex`` as a standalone pytest file, import it, and run the
+    generated test function.  Returns the path for copying into tests/."""
+    path = tmp_path / f"{name}.py"
+    path.write_text(cex.to_pytest(name))
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    getattr(mod, name)()   # the rendered assertions must hold
+    return path
+
+
+@pytest.fixture
+def render_counterexample(tmp_path):
+    """Render a certifier :class:`Counterexample` as a pytest case file
+    in ``tmp_path``, execute its assertions, and return the path."""
+    def render(cex, name="test_rendered_cex"):
+        return _render_counterexample(cex, tmp_path, name)
+    return render

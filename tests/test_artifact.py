@@ -2,7 +2,6 @@
 consumers -- resolution correctness, layout round-trips, compile cache,
 serialization, and the downstream bridges (pager, PartitionSpec)."""
 
-import json
 
 import numpy as np
 import pytest

@@ -1,13 +1,20 @@
 """System-level banking properties: grouping, validity, scheme soundness."""
 
-import itertools
 
 import numpy as np
 import pytest
 
-from repro.core import (AccessDecl, BankingPlanner, Counter, Ctrl,
-                        MemorySpec, Program, Sched, SolverOptions,
-                        build_groups, unroll)
+from repro.core import (
+    AccessDecl,
+    BankingPlanner,
+    Counter,
+    Ctrl,
+    MemorySpec,
+    Program,
+    Sched,
+    build_groups,
+    unroll
+)
 from repro.core.polytope import Affine
 from repro.core import problems
 

@@ -7,9 +7,15 @@ import threading
 
 import pytest
 
-from repro.core import (CandidateSpace, SolutionReducer, SolveShard,
-                        SolverOptions, build_groups, evaluate,
-                        evaluate_parallel, solve_space, unroll)
+from repro.core import (
+    CandidateSpace,
+    SolutionReducer,
+    SolverOptions,
+    build_groups,
+    evaluate,
+    evaluate_parallel,
+    unroll
+)
 from repro.core import problems
 from repro.core.candidates import EvaluatedCandidate
 from repro.core.planner import rank_solutions

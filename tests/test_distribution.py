@@ -1,14 +1,12 @@
 """Distribution layer: banking bridge, pipeline parallelism (subprocess
 with a forced multi-device CPU), mini dry-run integration."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 
 from repro.parallel import sharding as shd

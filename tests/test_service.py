@@ -11,7 +11,6 @@ import pytest
 from repro.core import (AccessDecl, BankingPlanner, Counter, Ctrl,
                         MemorySpec, PlanService, Program, Sched,
                         SolverOptions, StaleWhileRevalidate)
-from repro.core import planner as planner_mod
 from repro.core.polytope import Affine
 from repro.core.store import DirectoryStore
 

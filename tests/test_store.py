@@ -10,7 +10,6 @@ import pytest
 
 from repro.core import (AccessDecl, BankingPlanner, Counter, Ctrl,
                         MemorySpec, Program, Sched, SolverOptions)
-from repro.core import planner as planner_mod
 from repro.core.polytope import Affine
 from repro.core.store import DirectoryStore, FileLock, MemoryStore
 
