@@ -39,6 +39,12 @@ from .candidates import (
     space_from_wire,
     space_to_wire,
 )
+from ..runtime.tenancy import (
+    AdmissionError,
+    QOS_CLASSES,
+    QoSClass,
+    TenantRegistry,
+)
 from .fabric import SolveFabric, spawn_local_workers
 from .controller import AccessDecl, Counter, Ctrl, Program, Sched, Unroll, unroll
 from .geometry import FlatGeometry, MultiDimGeometry
@@ -79,15 +85,18 @@ from .telemetry import (
 from .grouping import build_groups
 
 __all__ = [
-    "Access", "AccessDecl", "AccessGroup", "Affine", "BankingLayout",
+    "Access", "AccessDecl", "AccessGroup", "AdmissionError", "Affine",
+    "BankingLayout",
     "BankingPlan", "BankingPlanner", "BankingSolution", "Candidate",
     "CandidateSpace", "CompiledBankingPlan", "Counter", "Ctrl", "CutGate",
     "DirectoryStore", "FlatGeometry", "Iterator", "MeasuredCost",
     "MeasuredScorer", "MemorySpec", "MemoryStore", "MultiDimGeometry",
     "PlanRequest", "PlanService", "PlanStore", "PlanTicket",
-    "PreparedRequest", "Program", "Sched", "ServiceTelemetry",
+    "PreparedRequest", "Program", "QOS_CLASSES", "QoSClass", "Sched",
+    "ServiceTelemetry",
     "SolutionReducer", "SolveFabric", "SolveShard", "SolverOptions",
-    "StaleWhileRevalidate", "TelemetryConfig", "TelemetryLog", "Unroll",
+    "StaleWhileRevalidate", "TelemetryConfig", "TelemetryLog",
+    "TenantRegistry", "Unroll",
     "as_compiled", "build_groups", "canonical_signature",
     "compile_geometry", "compile_plan", "compile_solution",
     "compile_trivial", "default_planner", "default_service",

@@ -128,6 +128,7 @@ class FabricStats:
     workers_joined: int = 0
     workers_lost: int = 0
     cert_rejected: int = 0    # result batches refused by a solve's verifier
+    heartbeats: int = 0       # liveness frames received from workers
 
 
 @dataclass
@@ -142,6 +143,8 @@ class FabricReport:
     workers_used: int = 0
     workers_lost: int = 0    # deaths of workers holding this solve's leases
     cert_rejected: int = 0   # result batches refused by the verifier
+    heartbeats: int = 0      # hb frames from workers holding our leases
+    peak_leases: int = 0     # max concurrently outstanding leases
 
 
 @dataclass
@@ -176,15 +179,19 @@ class _Worker:
         self.outstanding: Dict[int, _Lease] = {}
         self.spaces: set = set()      # solve_ids whose space was shipped
         self.alive = True
+        self.last_seen = time.monotonic()  # any frame refreshes this
+        self.hb_seen = False          # worker speaks the heartbeat frame
 
 
 class _FabricSolve:
     def __init__(self, solve_id: int, space: CandidateSpace,
-                 reducer: SolutionReducer, verifier=None):
+                 reducer: SolutionReducer, verifier=None,
+                 lease_cap: Optional[int] = None):
         self.solve_id = solve_id
         self.space = space
         self.reducer = reducer
         self.verifier = verifier          # untrusted-result gate (or None)
+        self.lease_cap = lease_cap        # max concurrent leases (QoS)
         self.payload = space_to_wire(space)
         self.pending: deque = deque()
         self.outstanding: Dict[int, _Lease] = {}
@@ -210,6 +217,13 @@ class SolveFabric:
     lease_window : max outstanding leases per worker (backpressure)
     lease_timeout : seconds before an unanswered lease is requeued with
         the slow worker excluded
+    hb_timeout : seconds of total silence (no frame of any kind) after
+        which a worker that HAS sent heartbeat frames is declared dead
+        and dropped -- far cheaper than waiting out ``lease_timeout``,
+        since workers heartbeat every couple of seconds
+        (``solve_worker.py --hb-interval``).  Workers that never sent a
+        heartbeat (older clients) are exempt and only age out via the
+        lease timeout.
     broadcast_cuts : distribute reducer cuts (lease stamping, mid-flight
         broadcast, and dispatch-time filtering); disable only to measure
         what the cut protocol saves
@@ -218,10 +232,12 @@ class SolveFabric:
     def __init__(self, listen: Tuple[str, int] = ("127.0.0.1", 0), *,
                  chunk: int = 32, lease_window: int = 2,
                  lease_timeout: float = 60.0,
+                 hb_timeout: float = 10.0,
                  broadcast_cuts: bool = True):
         self.chunk = max(1, int(chunk))
         self.lease_window = max(1, int(lease_window))
         self.lease_timeout = float(lease_timeout)
+        self.hb_timeout = float(hb_timeout)
         self.broadcast_cuts = broadcast_cuts
         self.stats = FabricStats()
         self._lock = threading.Lock()
@@ -312,6 +328,8 @@ class SolveFabric:
                     self._on_done(worker, msg)
                 elif t == "error":
                     self._on_error(worker, msg)
+                elif t == "hb":
+                    self._on_hb(worker)
                 # "join" is informational (pid/host for debugging)
         except Exception:
             # dead socket, poisoned frame, or a handler error (e.g. a
@@ -327,8 +345,24 @@ class SolveFabric:
         holds (a queued second lease must not time out while the worker
         is legitimately busy on its first).  Caller holds the lock."""
         now = time.monotonic()
+        worker.last_seen = now
         for lease in worker.outstanding.values():
             lease.issued_at = now
+
+    def _on_hb(self, worker: _Worker) -> None:
+        """A heartbeat proves the PROCESS alive -- it refreshes worker
+        liveness but deliberately NOT lease ``issued_at``: a worker that
+        heartbeats while hung on a lease must still lose that lease to
+        the lease timeout.  The frames are counted per solve the worker
+        holds leases for, so ``ServiceStats.fabric_heartbeats`` can
+        attribute them to tenants."""
+        with self._lock:
+            worker.last_seen = time.monotonic()
+            worker.hb_seen = True
+            self.stats.heartbeats += 1
+            for solve in {lease.solve for lease in
+                          worker.outstanding.values()}:
+                solve.report.heartbeats += 1
 
     def _on_results(self, worker: _Worker, msg: dict) -> None:
         with self._lock:
@@ -476,6 +510,11 @@ class SolveFabric:
                 continue
             still_pending: deque = deque()
             while solve.pending:
+                if (solve.lease_cap is not None
+                        and len(solve.outstanding) >= solve.lease_cap):
+                    # QoS cap: this solve may not hold more concurrent
+                    # leases -- other solves' units still dispatch
+                    break
                 unit = solve.pending.popleft()
                 target = None
                 capacity = False
@@ -503,6 +542,8 @@ class SolveFabric:
                 solve.outstanding[lease.lease_id] = lease
                 solve.workers_used.add(target.wid)
                 solve.report.leases += 1
+                solve.report.peak_leases = max(solve.report.peak_leases,
+                                               len(solve.outstanding))
                 self.stats.leases += 1
                 if solve.solve_id not in target.spaces:
                     target.spaces.add(solve.solve_id)
@@ -520,6 +561,17 @@ class SolveFabric:
 
     def _check_timeouts(self, solve: _FabricSolve) -> None:
         now = time.monotonic()
+        # heartbeat liveness first: a worker that speaks the hb frame
+        # and then goes silent (process death, network partition) is
+        # dropped after hb_timeout instead of burning the much longer
+        # lease_timeout.  Collect under the lock, drop outside it
+        # (_drop_worker takes the condition itself).
+        with self._lock:
+            silent = [w for w in self._workers.values()
+                      if w.alive and w.hb_seen
+                      and now - w.last_seen > self.hb_timeout]
+        for w in silent:
+            self._drop_worker(w)
         with self._cond:
             for lease in list(solve.outstanding.values()):
                 if now - lease.issued_at > self.lease_timeout:
@@ -546,7 +598,8 @@ class SolveFabric:
     def solve(self, space: CandidateSpace, *,
               reducer: Optional[SolutionReducer] = None,
               scorer=None, chunk: Optional[int] = None,
-              verifier=None) -> FabricReport:
+              verifier=None,
+              lease_cap: Optional[int] = None) -> FabricReport:
         """Evaluate ``space`` across the attached workers, merging every
         stream into ``reducer`` (one is created when omitted -- read the
         merged result off ``reducer.finalize()``).  Blocks until every
@@ -561,6 +614,10 @@ class SolveFabric:
         Locally evaluated orphan units bypass it -- they never crossed
         the trust boundary.  Build one with
         ``repro.analysis.make_batch_verifier(space)``.
+
+        ``lease_cap`` bounds this solve's CONCURRENT outstanding leases
+        (a low-QoS tenant's solve may not occupy every worker's lease
+        window while an interactive solve waits); ``None`` = unbounded.
         """
         red = reducer if reducer is not None else SolutionReducer(
             space, scorer=scorer)
@@ -570,7 +627,7 @@ class SolveFabric:
         # problems: do it before touching the fabric lock so concurrent
         # solves' result intake and dispatch never stall behind it
         solve = _FabricSolve(self._next_solve(), space, red,
-                             verifier=verifier)
+                             verifier=verifier, lease_cap=lease_cap)
         for lo in range(0, n, step):
             solve.pending.append(
                 _Unit(indices=tuple(range(lo, min(lo + step, n)))))
@@ -659,13 +716,16 @@ class SolveFabric:
 
 
 def spawn_local_workers(address: str, n: int, *,
-                        python: Optional[str] = None
+                        python: Optional[str] = None,
+                        hb_interval: Optional[float] = None
                         ) -> List[subprocess.Popen]:
     """Launch ``n`` solve-worker subprocesses attached to ``address``.
 
     The callers' ``src`` root is prepended to the children's
     ``PYTHONPATH`` so the workers resolve the same ``repro`` tree as
-    this process.  Remember to ``terminate()`` them (and ``wait()``).
+    this process.  ``hb_interval`` overrides the workers' heartbeat
+    cadence (seconds).  Remember to ``terminate()`` them (and
+    ``wait()``).
     """
     import repro
 
@@ -673,11 +733,11 @@ def spawn_local_workers(address: str, n: int, *,
     src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
     env = dict(os.environ)
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    return [
-        subprocess.Popen([python or sys.executable, "-m",
-                          "repro.launch.solve_worker", address], env=env)
-        for _ in range(n)
-    ]
+    argv = [python or sys.executable, "-m",
+            "repro.launch.solve_worker", address]
+    if hb_interval is not None:
+        argv += ["--hb-interval", str(hb_interval)]
+    return [subprocess.Popen(argv, env=env) for _ in range(n)]
 
 
 __all__ = [

@@ -47,17 +47,33 @@ execute**:
 
 Tickets deduplicate in-flight work: two submits of the same
 (signature, scorer) share one solve.
+
+The front door is **multi-tenant** (:mod:`repro.runtime.tenancy`):
+``PlanService(tenants=TenantRegistry(...))`` + ``submit(...,
+tenant="name")`` gives each consumer a QoS class (priority band,
+fair-share weight, in-flight/deferral quotas, shard and fabric-lease
+caps), an :class:`~repro.runtime.tenancy.AdmissionController` that
+defers -- honestly, fallback still served -- or sheds over-quota cold
+solves, weighted fair-share queue draining so a noisy tenant cannot
+starve the rest, and an exact per-tenant stats slice
+(``stats.for_tenant(name)``).
 """
 
 from __future__ import annotations
 
 import itertools
-import queue
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple, Union
 
+from ..runtime.tenancy import (
+    DEFAULT_TENANT,
+    AdmissionController,
+    AdmissionError,
+    FairShareQueue,
+    TenantRegistry,
+)
 from .artifact import CompiledBankingPlan, compile_solution, compile_trivial
 from .candidates import SolutionReducer, SolveShard, evaluate
 from .planner import (
@@ -116,7 +132,8 @@ class PlanTicket:
 
     def __init__(self, *, service: "PlanService", prep: PreparedRequest,
                  priority: int = 0, shard_budget: Optional[int] = None,
-                 executor: Optional[str] = None, verify: str = "off"):
+                 executor: Optional[str] = None, verify: str = "off",
+                 tenant: str = DEFAULT_TENANT):
         self._service = service
         self._prep = prep
         self.memory = prep.memory
@@ -127,8 +144,12 @@ class PlanTicket:
         self.shard_budget = shard_budget
         self.executor = executor     # None = the service default
         self.verify = verify         # resolved verification mode
+        self.tenant = tenant         # resolved tenant name
+        self.deferred = False        # parked by admission control
         self.submitted_at = time.time()
+        self.resolved_at: Optional[float] = None
         self.status = "queued"
+        self._admitted = False       # holds one admission in-flight slot
         self._event = threading.Event()
         self._plan: Optional[BankingPlan] = None
         self._error: Optional[BaseException] = None
@@ -276,11 +297,13 @@ class PlanTicket:
     def _resolve(self, plan: BankingPlan) -> None:
         self._plan = plan
         self.status = "done"
+        self.resolved_at = time.time()
         self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
         self._error = exc
         self.status = "error"
+        self.resolved_at = time.time()
         self._event.set()
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -296,6 +319,8 @@ class ServiceStats:
     queued: int = 0
     solved: int = 0
     errors: int = 0
+    deferred: int = 0        # over-quota submits parked by admission
+    shed: int = 0            # submits refused outright (backlog full)
     revalidations: int = 0   # tickets served a stale near-match
     shards_spawned: int = 0  # SolveShards fanned across the worker pool
     shards_completed: int = 0
@@ -308,6 +333,7 @@ class ServiceStats:
     fabric_requeues: int = 0  # leases requeued after worker death/timeout
     fabric_cut_broadcasts: int = 0  # cut snapshots pushed mid-flight
     fabric_workers_lost: int = 0
+    fabric_heartbeats: int = 0  # liveness frames from remote workers
     observations: int = 0    # measured gather/scatter/tick timings logged
     refreshes: int = 0       # ml_scorer.json refits from measured pairs
     demotions: int = 0       # stored plans evicted for measured slowness
@@ -315,10 +341,43 @@ class ServiceStats:
     cert_failures: int = 0   # solver outputs refused by the certifier
     cert_rejected: int = 0   # fabric result batches rejected + requeued
     lint_errors: int = 0     # submits refused by the pre-solve lint pass
+    # per-tenant slices (global counters include every slice; a slice
+    # never has its own sub-slices)
+    tenants: Dict[str, "ServiceStats"] = field(default_factory=dict,
+                                               repr=False, compare=False)
 
-    def as_dict(self) -> Dict[str, int]:
-        """Counters as a plain dict (stats lines, JSON dumps)."""
-        return dict(vars(self))
+    def bump(self, name: str, n: int = 1,
+             tenant: Optional[str] = None) -> None:
+        """Add ``n`` to counter ``name`` here AND on the tenant's slice.
+
+        The single write path is what makes ``for_tenant`` slices
+        reconcile *exactly* with the global counters: every global
+        increment lands on exactly one slice (``tenant=None`` =
+        the default tenant).
+        """
+        setattr(self, name, getattr(self, name) + n)
+        if self.tenants is not None:   # a slice doesn't slice further
+            slice_ = self.for_tenant(tenant or DEFAULT_TENANT)
+            setattr(slice_, name, getattr(slice_, name) + n)
+
+    def for_tenant(self, name: str) -> "ServiceStats":
+        """The tenant's counter slice (created on first touch)."""
+        stats = self.tenants.get(name)
+        if stats is None:
+            stats = ServiceStats(tenants=None)
+            self.tenants[name] = stats
+        return stats
+
+    def as_dict(self, include_tenants: bool = True) -> Dict[str, object]:
+        """Counters as a JSON-serializable dict; per-tenant slices nest
+        under ``"tenants"`` (omitted when empty)."""
+        out: Dict[str, object] = {
+            k: v for k, v in vars(self).items() if isinstance(v, int)}
+        if include_tenants and self.tenants:
+            out["tenants"] = {
+                name: s.as_dict(include_tenants=False)
+                for name, s in sorted(self.tenants.items())}
+        return out
 
 
 @dataclass
@@ -400,6 +459,17 @@ class PlanService:
         ``"fabric"`` executor (attach one later via
         :meth:`attach_fabric`); a fabric with no live workers falls
         back to the pool
+    tenants : the :class:`~repro.runtime.tenancy.TenantRegistry` naming
+        this service's consumers and their QoS classes.  Submits tag
+        themselves with ``submit(..., tenant="name")``: the tenant's
+        QoS band offsets the ticket priority, its quotas gate admission
+        (over-quota cold solves defer -- fallback still served -- and a
+        full deferral backlog sheds with an honest
+        :class:`~repro.runtime.tenancy.AdmissionError`), its weight
+        drives fair-share queue draining, and its shard/lease caps
+        bound solver fan-out.  ``stats.for_tenant(name)`` is the
+        tenant's exact counter slice.  Default: a fresh permissive
+        registry (untagged submits behave exactly as before tenancy).
     """
 
     def __init__(self, planner: Optional[BankingPlanner] = None, *,
@@ -409,7 +479,8 @@ class PlanService:
                  shard_budget: Optional[int] = None,
                  executor: str = "pool",
                  fabric=None,
-                 verify: str = "off"):
+                 verify: str = "off",
+                 tenants: Optional[TenantRegistry] = None):
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; one of {EXECUTORS}")
@@ -432,7 +503,12 @@ class PlanService:
         self.revalidate = (revalidate if revalidate is not None
                            else StaleWhileRevalidate())
         self.stats = ServiceStats()
-        self._queue: "queue.PriorityQueue" = queue.PriorityQueue()
+        self.tenants = tenants if tenants is not None else TenantRegistry()
+        self._admission = AdmissionController(self.tenants)
+        # always the fair-share queue, even single-tenant: equal-band
+        # entries drain in submit order (seq tie-break), and tenant
+        # weights only matter once a registry defines contending ones
+        self._queue = FairShareQueue(self.tenants)
         self._seq = itertools.count()
         self._inflight: Dict[Tuple[str, str], PlanTicket] = {}
         self._trivial: Dict[Tuple, CompiledBankingPlan] = {}
@@ -478,7 +554,8 @@ class PlanService:
                priority: int = 0,
                shard_budget: Optional[int] = None,
                executor: Optional[str] = None,
-               verify: Optional[str] = None) -> PlanTicket:
+               verify: Optional[str] = None,
+               tenant: Optional[str] = None) -> PlanTicket:
         """Pose one banking problem; returns a :class:`PlanTicket`.
 
         Runs unroll + grouping + signature + cache probe inline (bad
@@ -496,12 +573,19 @@ class PlanService:
         ``repro.analysis.LintError`` here), solver output is
         independently certified before it is cached or persisted, and
         with "all" every fabric result batch is certified on intake.
+
+        ``tenant`` names the submitting consumer (see the ``tenants``
+        registry): its QoS class offsets the priority band, its quotas
+        may defer or shed this submit's cold solve (deferral is honest
+        -- ``ticket.deferred`` -- and the fallback artifact still serves
+        immediately), and its stats slice records the submit.
         """
         prep = self.planner.prepare(program, memory, opts=opts,
                                     scorer=scorer, use_cache=use_cache)
         return self.submit_prepared(prep, priority=priority,
                                     shard_budget=shard_budget,
-                                    executor=executor, verify=verify)
+                                    executor=executor, verify=verify,
+                                    tenant=tenant)
 
     def submit_request(self, request: PlanRequest, *,
                        priority: int = 0) -> PlanTicket:
@@ -512,7 +596,8 @@ class PlanService:
                         priority: int = 0,
                         shard_budget: Optional[int] = None,
                         executor: Optional[str] = None,
-                        verify: Optional[str] = None) -> PlanTicket:
+                        verify: Optional[str] = None,
+                        tenant: Optional[str] = None) -> PlanTicket:
         if executor is not None and executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; one of {EXECUTORS}")
@@ -520,26 +605,31 @@ class PlanService:
             raise ValueError(
                 f"unknown verify mode {verify!r}; one of {VERIFY_MODES}")
         verify = verify if verify is not None else self.verify
-        self.stats.submits += 1
+        ten = self.tenants.resolve(tenant)
+        # the QoS band offsets the caller's priority: an interactive
+        # tenant's priority-0 submit still outranks a batch tenant's
+        priority = priority + ten.qos.priority
+        self.stats.bump("submits", tenant=ten.name)
         if verify != "off":
             # lint before anything queues: problems no banking can fix
             # (OOB accesses, colliding Syms, oversubscribed ports) must
             # fail the submit, not burn a solve
-            self._lint_gate(prep)
+            self._lint_gate(prep, ten.name)
         key = (prep.signature, prep.scorer_name)
         if prep.request.use_cache:
             hit = self.planner.lookup(prep)
             if hit is not None:
-                self.stats.sync_hits += 1
+                self.stats.bump("sync_hits", tenant=ten.name)
                 ticket = PlanTicket(service=self, prep=prep,
-                                    priority=priority, verify=verify)
+                                    priority=priority, verify=verify,
+                                    tenant=ten.name)
                 ticket._resolve(hit)
                 if self.telemetry is not None:
                     self.telemetry.register(prep, hit)
                 return ticket
         ticket = PlanTicket(service=self, prep=prep, priority=priority,
                             shard_budget=shard_budget, executor=executor,
-                            verify=verify)
+                            verify=verify, tenant=ten.name)
         if prep.request.use_cache:
             # atomic check-and-register: concurrent submits of the same
             # (signature, scorer) must share ONE solve
@@ -548,20 +638,47 @@ class PlanService:
                 if inflight is None:
                     self._inflight[key] = ticket
             if inflight is not None:
-                self.stats.deduped += 1
+                self.stats.bump("deduped", tenant=ten.name)
                 if priority < inflight.priority:
-                    # urgency upgrade: re-enqueue the same ticket at the
-                    # new priority; _claim() makes later pops no-ops
+                    # urgency upgrade; a still-deferred ticket isn't in
+                    # the queue yet -- it just keeps the better priority
+                    # for when admission releases it
                     inflight.priority = priority
-                    self._queue.put((priority, next(self._seq),
-                                     inflight._prep, inflight))
+                    if not inflight.deferred:
+                        # re-enqueue the same ticket at the new
+                        # priority; _claim() makes later pops no-ops
+                        self._queue.put((priority, next(self._seq),
+                                         inflight._prep, inflight))
                 return inflight
             stale = self.revalidate.pick(self.planner, prep)
             if stale is not None:
                 ticket._stale = stale
                 ticket.status = "revalidating"
-                self.stats.revalidations += 1
-        self.stats.queued += 1
+                self.stats.bump("revalidations", tenant=ten.name)
+        # admission: the cold solve claims one of the tenant's in-flight
+        # slots, or parks in its deferral backlog, or -- backlog full --
+        # sheds with an honest error (the fallback artifact still works)
+        if self._admission.try_acquire(ten.name):
+            ticket._admitted = True
+        elif self._admission.defer(ten.name, (prep, ticket)):
+            ticket.deferred = True
+            if ticket.status == "queued":
+                ticket.status = "deferred"
+            self.stats.bump("deferred", tenant=ten.name)
+            return ticket
+        else:
+            self.stats.bump("shed", tenant=ten.name)
+            with self._lock:
+                if self._inflight.get(key) is ticket:
+                    del self._inflight[key]
+            ticket._fail(AdmissionError(
+                f"tenant {ten.name!r} over quota "
+                f"(max_inflight={ten.qos.max_inflight}, "
+                f"max_deferred={ten.qos.max_deferred}): submit shed; "
+                f"the ticket's fallback artifact is still servable"))
+            ticket.status = "shed"
+            return ticket
+        self.stats.bump("queued", tenant=ten.name)
         self._queue.put((priority, next(self._seq), prep, ticket))
         self._ensure_workers()
         return ticket
@@ -581,17 +698,18 @@ class PlanService:
         return art
 
     # -- static verification (repro.analysis) ------------------------------------
-    def _lint_gate(self, prep: PreparedRequest) -> None:
+    def _lint_gate(self, prep: PreparedRequest,
+                   tenant: str = DEFAULT_TENANT) -> None:
         """Refuse submits whose Program fails the lint pass (raises
         :class:`repro.analysis.LintError` on error-severity findings)."""
         from ..analysis.lint import LintError, lint_program
         report = lint_program(prep.request.program, prep.memory)
         if not report.ok:
             with self._lock:
-                self.stats.lint_errors += 1
+                self.stats.bump("lint_errors", tenant=tenant)
             raise LintError(report)
 
-    def _make_verifier(self, mode: str):
+    def _make_verifier(self, mode: str, tenant: str = DEFAULT_TENANT):
         """The certify-before-cache callback handed to
         ``BankingPlanner.complete_solve`` (``None`` when verification is
         off).  Failed certification bumps ``cert_failures`` and raises
@@ -608,14 +726,14 @@ class PlanService:
                                scorer=prep.scorer_name)
             if not res.ok:
                 with self._lock:
-                    self.stats.cert_failures += 1
+                    self.stats.bump("cert_failures", tenant=tenant)
                 why = (res.counterexample.describe()
                        if res.counterexample is not None else res.reason)
                 raise CertificationError(
                     f"solver output failed independent certification: "
                     f"{why}", res.counterexample)
             with self._lock:
-                self.stats.certified += 1
+                self.stats.bump("certified", tenant=tenant)
             if res.certificate is not None \
                     and self.planner.store is not None:
                 self.planner.store.put_certificate(
@@ -691,7 +809,7 @@ class PlanService:
                                        scorer_fn, fabric)
                 return
             with self._lock:     # no fabric / no workers: the pool runs
-                self.stats.fabric_fallbacks += 1
+                self.stats.bump("fabric_fallbacks", tenant=ticket.tenant)
         if ticket.shard_budget is not None:
             budget = ticket.shard_budget
         elif self.shard_budget is not None:
@@ -699,7 +817,11 @@ class PlanService:
         else:                    # adaptive: sized from the enumeration
             budget = space.suggested_shards(self._max_workers)
             with self._lock:
-                self.stats.adaptive_budgets += 1
+                self.stats.bump("adaptive_budgets", tenant=ticket.tenant)
+        qos_cap = self.tenants.resolve(ticket.tenant).qos.shard_budget
+        if qos_cap is not None:
+            # a low-QoS tenant's solve may not fan across the whole pool
+            budget = min(budget, qos_cap)
         shards = space.shards(max(1, budget))
         state = _SolveState(prep=prep, ticket=ticket, reducer=reducer,
                             scorer_fn=scorer_fn,
@@ -708,10 +830,11 @@ class PlanService:
         if not shards:   # empty candidate space: resolve immediately
             self._finish(ticket, prep, plan=self.planner.complete_solve(
                 prep, [], 0.0, scorer_fn,
-                verify=self._make_verifier(ticket.verify)))
+                verify=self._make_verifier(ticket.verify, ticket.tenant)))
             return
         with self._lock:
-            self.stats.shards_spawned += len(shards)
+            self.stats.bump("shards_spawned", len(shards),
+                            tenant=ticket.tenant)
         for shard in shards:
             self._queue.put((ticket.priority, next(self._seq),
                              _ShardJob(state=state, shard=shard), ticket))
@@ -726,28 +849,37 @@ class PlanService:
         to the pool path -- the same reducer merges either way."""
         started = time.perf_counter()
         with self._lock:
-            self.stats.fabric_solves += 1
+            self.stats.bump("fabric_solves", tenant=ticket.tenant)
         verifier = None
         if ticket.verify == "all":
             # certify every solution batch the untrusted workers stream
             # back; bad batches are rejected + requeued by the fabric
             from ..analysis.certify import make_batch_verifier
             verifier = make_batch_verifier(space)
+        lease_cap = self.tenants.resolve(ticket.tenant).qos.fabric_lease_cap
         try:
             report = fabric.solve(space, reducer=reducer,
-                                  verifier=verifier)
+                                  verifier=verifier, lease_cap=lease_cap)
             plan = self.planner.complete_solve(
                 prep, reducer.finalize(),
                 time.perf_counter() - started, scorer_fn,
-                verify=self._make_verifier(ticket.verify))
+                verify=self._make_verifier(ticket.verify, ticket.tenant))
             with self._lock:
-                self.stats.fabric_leases += report.leases
-                self.stats.fabric_requeues += report.requeues
-                self.stats.fabric_cut_broadcasts += report.cut_broadcasts
-                self.stats.fabric_workers_lost += report.workers_lost
-                self.stats.cert_rejected += report.cert_rejected
-                self.stats.best_promotions += reducer.promotions
-                self.stats.dedup_hits += reducer.dedup_hits
+                t = ticket.tenant
+                self.stats.bump("fabric_leases", report.leases, tenant=t)
+                self.stats.bump("fabric_requeues", report.requeues,
+                                tenant=t)
+                self.stats.bump("fabric_cut_broadcasts",
+                                report.cut_broadcasts, tenant=t)
+                self.stats.bump("fabric_workers_lost",
+                                report.workers_lost, tenant=t)
+                self.stats.bump("fabric_heartbeats",
+                                getattr(report, "heartbeats", 0), tenant=t)
+                self.stats.bump("cert_rejected", report.cert_rejected,
+                                tenant=t)
+                self.stats.bump("best_promotions", reducer.promotions,
+                                tenant=t)
+                self.stats.bump("dedup_hits", reducer.dedup_hits, tenant=t)
         except BaseException as e:
             self._finish(ticket, prep, error=e)
         else:
@@ -764,17 +896,20 @@ class PlanService:
             return
         finally:
             with self._lock:
-                self.stats.shards_completed += 1
+                self.stats.bump("shards_completed", tenant=ticket.tenant)
         if state.shard_finished():
             try:
                 red = state.reducer
                 plan = self.planner.complete_solve(
                     state.prep, red.finalize(),
                     time.perf_counter() - state.started, state.scorer_fn,
-                    verify=self._make_verifier(state.ticket.verify))
+                    verify=self._make_verifier(state.ticket.verify,
+                                               state.ticket.tenant))
                 with self._lock:
-                    self.stats.best_promotions += red.promotions
-                    self.stats.dedup_hits += red.dedup_hits
+                    self.stats.bump("best_promotions", red.promotions,
+                                    tenant=ticket.tenant)
+                    self.stats.bump("dedup_hits", red.dedup_hits,
+                                    tenant=ticket.tenant)
             except BaseException as e:
                 self._finish(ticket, state.prep, error=e)
             else:
@@ -785,13 +920,13 @@ class PlanService:
                 error: Optional[BaseException] = None) -> None:
         if error is not None:
             with self._lock:
-                self.stats.errors += 1
+                self.stats.bump("errors", tenant=ticket.tenant)
             ticket._fail(error)
             # the reducer stays attached: a failed search's partial best
             # remains servable through best_so_far()
         else:
             with self._lock:
-                self.stats.solved += 1
+                self.stats.bump("solved", tenant=ticket.tenant)
             ticket._resolve(plan)   # done flips first: best_so_far now
             ticket._release_reducer()  # reads the plan, so drop the search
             if self.telemetry is not None:
@@ -800,13 +935,35 @@ class PlanService:
             key = (prep.signature, prep.scorer_name)
             if self._inflight.get(key) is ticket:
                 del self._inflight[key]
+        if ticket._admitted:
+            self._release_admission(ticket.tenant)
+
+    def _release_admission(self, tenant: str) -> None:
+        """Free the finished solve's in-flight slot and queue whatever
+        the tenant's deferral backlog can now admit (oldest first, at
+        each deferred ticket's kept priority)."""
+        for prep2, t2 in self._admission.release(tenant):
+            t2.deferred = False
+            t2._admitted = True
+            if t2.status == "deferred":
+                t2.status = "queued"
+            self.stats.bump("queued", tenant=t2.tenant)
+            self._queue.put((t2.priority, next(self._seq), prep2, t2))
+            try:
+                self._ensure_workers()
+            except RuntimeError:
+                # shut down mid-release: the entry stays queued; the
+                # drained workers' sentinels already passed it by, and
+                # callers of a shut-down service hold their own tickets
+                pass
 
     def drain(self, timeout: Optional[float] = None) -> bool:
-        """Block until every queued problem has been solved (or fail the
-        wait after ``timeout`` seconds).  Returns True when drained."""
+        """Block until every queued problem has been solved -- deferred
+        admissions included -- (or fail the wait after ``timeout``
+        seconds).  Returns True when drained."""
         deadline = (None if timeout is None
                     else time.monotonic() + timeout)
-        while self._queue.unfinished_tasks:
+        while self._queue.unfinished_tasks or self._admission.pending():
             if deadline is not None and time.monotonic() > deadline:
                 return False
             time.sleep(0.002)

@@ -616,7 +616,7 @@ class ServiceTelemetry:
         svc = self.service
         if svc is not None:
             with svc._lock:
-                svc.stats.observations += 1
+                svc.stats.bump("observations")
         if do_flush:
             self.flush()
         if do_refresh:
@@ -690,7 +690,7 @@ class ServiceTelemetry:
         svc = self.service
         if svc is not None:
             with svc._lock:
-                svc.stats.refreshes += 1
+                svc.stats.bump("refreshes")
         return True
 
     # -- demotion --------------------------------------------------------------
@@ -737,7 +737,7 @@ class ServiceTelemetry:
             planner.evict(*key)
         if svc is not None:
             with svc._lock:
-                svc.stats.demotions += 1
+                svc.stats.bump("demotions")
             # speculative re-solve through the normal revalidation path:
             # the eviction above turned this into a cold submit, and the
             # scorer (rebound to this hub's log) now knows the loser lost

@@ -69,9 +69,20 @@ def main():
                          "plans, which re-verify on hydrate); \"all\" also "
                          "certifies every result batch remote fabric "
                          "workers stream back, rejecting forged ones")
+    ap.add_argument("--tenant", default=None,
+                    help="tenant name this server submits under on a "
+                         "shared multi-tenant service (per-tenant stats "
+                         "slice, quotas, QoS band; see --qos and "
+                         "launch/serve_fleet.py for the fleet story)")
+    ap.add_argument("--qos", default=None,
+                    choices=("interactive", "batch", "best_effort",
+                             "default"),
+                    help="QoS class to register --tenant under "
+                         "(default: the registry's permissive default)")
     ap.add_argument("--stats-interval", type=float, default=0.0,
                     help="print the service's stats counters (observations/"
-                         "refreshes/demotions included) every N seconds "
+                         "refreshes/demotions included, per-tenant slices "
+                         "nested under \"tenants\") every N seconds "
                          "while serving (0 = off)")
     args = ap.parse_args()
 
@@ -109,14 +120,22 @@ def main():
             else:
                 print("fabric: workers did not attach in time; cold "
                       "solves fall back to the in-process pool")
+    tenants = None
+    if args.tenant:
+        from ..runtime.tenancy import TenantRegistry
+        tenants = TenantRegistry()
+        tenants.register(args.tenant, args.qos or "default")
+        print(f"tenant {args.tenant!r} registered "
+              f"(qos={args.qos or 'default'})")
     service = None
     if store is not None or fabric is not None or args.telemetry \
-            or args.verify != "off":
+            or args.verify != "off" or tenants is not None:
         service = PlanService(
             store=store,
             executor="fabric" if fabric is not None else "pool",
             fabric=fabric,
-            verify=args.verify)
+            verify=args.verify,
+            tenants=tenants)
     if args.verify != "off":
         print(f"verification armed ({args.verify}): lint gate + "
               f"independent conflict certification"
@@ -148,7 +167,8 @@ def main():
     ticket = page_ticket(cfg, max_len=args.max_len,
                          page=min(16, args.max_len // 4),
                          readers=args.max_batch, service=service,
-                         scorer="measured" if args.telemetry else None)
+                         scorer="measured" if args.telemetry else None,
+                         tenant=args.tenant)
     print(f"submitted KV-pool plan in "
           f"{(time.perf_counter() - t_submit) * 1e3:.2f} ms "
           f"(ticket: {ticket.status})")
@@ -187,6 +207,12 @@ def main():
         print(f"verification: {s.certified} certified, "
               f"{s.cert_failures} refused, {s.cert_rejected} fabric "
               f"batches rejected, {s.lint_errors} lint refusals")
+    if args.tenant and service is not None:
+        import json as json_mod
+        slice_ = service.stats.for_tenant(args.tenant)
+        print(f"tenant {args.tenant!r} stats:",
+              json_mod.dumps({k: v for k, v
+                              in slice_.as_dict(False).items() if v}))
     if args.telemetry and service is not None \
             and service.telemetry is not None:
         flushed = service.telemetry.flush()

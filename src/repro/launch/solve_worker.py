@@ -37,10 +37,19 @@ from ..core.candidates import (
 from ..core.fabric import read_frame, write_frame
 
 RESULT_BATCH = 8      # events per result frame: keeps cuts/best-so-far fresh
+HB_INTERVAL = 2.0     # seconds between heartbeat frames (0 disables)
 
 
-def run_worker(address: str, *, result_batch: int = RESULT_BATCH) -> None:
-    """Serve leases from the fabric at ``address`` until it goes away."""
+def run_worker(address: str, *, result_batch: int = RESULT_BATCH,
+               hb_interval: float = HB_INTERVAL) -> None:
+    """Serve leases from the fabric at ``address`` until it goes away.
+
+    A daemon thread sends a tiny ``{"t": "hb"}`` frame every
+    ``hb_interval`` seconds so the fabric can detect this process dying
+    (or partitioning) within ``hb_timeout`` instead of waiting out a
+    full lease timeout.  Heartbeats prove the *process* alive, not lease
+    progress -- a hung evaluation still loses its lease on time.
+    """
     host, _, port = address.rpartition(":")
     sock = socket.create_connection((host or "127.0.0.1", int(port)))
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -51,6 +60,18 @@ def run_worker(address: str, *, result_batch: int = RESULT_BATCH) -> None:
     spaces: Dict[int, CandidateSpace] = {}
     gates: Dict[int, CutGate] = {}
     leases: "queue.Queue" = queue.Queue()
+    stop = threading.Event()
+
+    def heartbeat() -> None:
+        while not stop.wait(hb_interval):
+            try:
+                write_frame(sock, {"t": "hb"}, send_lock)
+            except OSError:
+                return                    # fabric went away: main loop ends
+
+    if hb_interval > 0:
+        threading.Thread(target=heartbeat, daemon=True,
+                         name="fabric-hb").start()
 
     def reader() -> None:
         # cuts and retirements apply IMMEDIATELY (mid-evaluation); only
@@ -127,6 +148,7 @@ def run_worker(address: str, *, result_batch: int = RESULT_BATCH) -> None:
                                    "error": repr(e)}, send_lock)
             except OSError:
                 break
+    stop.set()
     try:
         sock.close()
     except OSError:
@@ -141,13 +163,18 @@ def main() -> None:
     ap.add_argument("--procs", type=int, default=1,
                     help="worker processes to run from this invocation "
                          "(each gets its own connection and lease window)")
+    ap.add_argument("--hb-interval", type=float, default=HB_INTERVAL,
+                    help="seconds between liveness heartbeat frames "
+                         "(0 disables; the fabric then falls back to "
+                         "lease timeouts for dead-worker detection)")
     args = ap.parse_args()
     if args.procs <= 1:
-        run_worker(args.address)
+        run_worker(args.address, hb_interval=args.hb_interval)
         return
     import multiprocessing as mp
 
-    procs = [mp.Process(target=run_worker, args=(args.address,))
+    procs = [mp.Process(target=run_worker, args=(args.address,),
+                        kwargs={"hb_interval": args.hb_interval})
              for _ in range(args.procs)]
     for p in procs:
         p.start()

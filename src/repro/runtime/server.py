@@ -72,7 +72,7 @@ def _page_program(max_len: int, page: int, readers: int) -> Program:
 def page_ticket(cfg: ArchConfig, max_len: int, page: int = 128,
                 readers: int = 8, *,
                 service: Optional[PlanService] = None,
-                scorer=None) -> PlanTicket:
+                scorer=None, tenant: Optional[str] = None) -> PlanTicket:
     """Submit the KV-pool banking problem (pages = banks); returns the
     :class:`PlanTicket` immediately.
 
@@ -82,13 +82,16 @@ def page_ticket(cfg: ArchConfig, max_len: int, page: int = 128,
     when the solve lands; a warm plan store answers before the ticket is
     even returned.  ``scorer="measured"`` ranks candidates on the
     service's telemetry log (see ``PlanService.enable_telemetry``).
+    ``tenant`` names this server on a shared multi-tenant service
+    (QoS band, quotas, per-tenant stats -- see
+    :mod:`repro.runtime.tenancy`).
     """
     from ..core.solver import SolverOptions
     svc = service if service is not None else default_service()
     return svc.submit(
         _page_program(max_len, page, readers), "kv_pool",
         opts=SolverOptions(b_candidates=(page, 1), allow_multidim=False),
-        scorer=scorer)
+        scorer=scorer, tenant=tenant)
 
 
 def page_solution(cfg: ArchConfig, max_len: int, page: int = 128,

@@ -302,3 +302,91 @@ def test_suggested_shards_scales_with_enumeration():
     planner = BankingPlanner()
     svc = PlanService(planner=planner, workers=2, shard_budget=3)
     assert svc.shard_budget == 3
+
+
+# ---------------------------------------------------------------------------
+# Worker heartbeats
+# ---------------------------------------------------------------------------
+
+
+def test_worker_heartbeats_are_counted():
+    """Real workers emit the lightweight hb frame on their own cadence
+    (even while idle) and the fabric counts every one."""
+    fabric = SolveFabric(chunk=16)
+    procs = []
+    try:
+        procs = spawn_local_workers(fabric.address, 1, hb_interval=0.1)
+        assert fabric.wait_for_workers(1, timeout=60)
+        deadline = time.monotonic() + 30
+        while fabric.stats.heartbeats < 3 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert fabric.stats.heartbeats >= 3
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            p.wait(timeout=10)
+        fabric.shutdown()
+
+
+def test_heartbeat_timeout_drops_silent_worker_before_lease_timeout():
+    """A worker that has spoken hb and then goes silent while holding a
+    lease is dropped after ``hb_timeout`` -- NOT after the much longer
+    lease timeout -- and its lease converges locally."""
+    from repro.core.fabric import read_frame, write_frame
+    fabric = SolveFabric(chunk=64, hb_timeout=1.0, lease_timeout=300.0)
+    sock = None
+    try:
+        import socket as socket_mod
+        host, _, port = fabric.address.rpartition(":")
+        sock = socket_mod.create_connection((host, int(port)))
+        send_lock = threading.Lock()
+        write_frame(sock, {"t": "join", "pid": 0, "host": "fake"},
+                    send_lock)
+        got_lease = threading.Event()
+
+        def fake_worker():
+            # hb once after the first lease, then total silence: the
+            # fabric must not wait lease_timeout=300s for this one
+            try:
+                while True:
+                    msg = read_frame(sock)
+                    if msg.get("t") == "lease" and not got_lease.is_set():
+                        write_frame(sock, {"t": "hb"}, send_lock)
+                        got_lease.set()
+            except Exception:
+                pass
+
+        threading.Thread(target=fake_worker, daemon=True).start()
+        assert fabric.wait_for_workers(1, timeout=30)
+        mem, groups, iters = _problem("sobel")
+        space = CandidateSpace(mem, groups, iters, SolverOptions())
+        red = SolutionReducer(space)
+        t0 = time.monotonic()
+        report = fabric.solve(space, reducer=red)
+        wall = time.monotonic() - t0
+        assert got_lease.is_set(), "fake worker never got a lease"
+        assert wall < 60, f"hb drop did not beat lease_timeout ({wall=})"
+        assert fabric.stats.heartbeats >= 1
+        assert fabric.stats.workers_lost >= 1
+        assert report.local_evaluated > 0     # orphan units ran locally
+        winner = _key(rank_solutions(list(red.finalize()))[0])
+        assert winner == _mono_winner("sobel")
+    finally:
+        fabric.shutdown()
+        if sock is not None:
+            sock.close()
+
+
+def test_lease_cap_bounds_concurrent_leases(cluster2):
+    """solve(lease_cap=1) never holds more than one lease in flight --
+    the per-tenant fabric QoS knob -- and still converges exactly."""
+    mem, groups, iters = _problem("sobel")
+    space = CandidateSpace(mem, groups, iters, SolverOptions())
+    red = SolutionReducer(space)
+    report = cluster2.fabric.solve(space, reducer=red, chunk=8,
+                                   lease_cap=1)
+    assert report.peak_leases == 1
+    assert report.leases > 1          # sequential leases, not one giant
+    winner = _key(rank_solutions(list(red.finalize()))[0])
+    assert winner == _mono_winner("sobel")
