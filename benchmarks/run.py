@@ -632,7 +632,88 @@ def bench_multi_tenant(fast: bool = False) -> None:
         json.dump(out, f, indent=1)
 
 
+def bench_joint_plan(fast: bool = False) -> None:
+    """Whole-model joint planning under a shared resource budget, on two
+    real model configs (dense qwen2_7b: one KV pool; MoE olmoe_1b_7b: KV
+    pool + expert dispatch table).  The independent baseline lets every
+    memory take its own argmin; the joint run co-selects under a BRAM
+    budget set to 60% of the baseline's draw -- the argmins can NOT fit,
+    the joint selection must.  Every non-trivial selected scheme must
+    come back certified conflict-free (verify="store" is armed), and a
+    slack-budget joint run must reproduce the baseline exactly.
+    Writes results/BENCH_joint_plan.json.
+    """
+    del fast
+    from repro.core import PlanService, ResourceBudget, SolverOptions
+    from repro.core.jointplan import independent_use
+    from repro.configs import get_arch
+    from repro.runtime.server import model_memory_program
+
+    out = {}
+    print("\n=== Joint whole-model planning (budget vs independent) ===")
+    for arch in ("qwen2-7b", "olmoe-1b-7b"):
+        cfg = get_arch(arch).reduced()
+        program = model_memory_program(cfg, max_len=64, page=16, readers=4)
+        opts = SolverOptions(b_candidates=(16, 1), allow_multidim=False)
+        svc = PlanService(workers=2, verify="store")
+        # independent baseline: every memory argmins on its own
+        t0 = time.perf_counter()
+        plans = svc.planner.plan_all(program, opts=opts)
+        indep_s = time.perf_counter() - t0
+        indep = independent_use(plans)
+        # slack-budget joint == independent, exactly
+        slack = svc.submit_joint(program, opts=opts).result(timeout=300)
+        assert slack.total_use.as_tuple() == indep.as_tuple(), \
+            f"{arch}: slack joint drifted from independent planning"
+        # 60% of the baseline BRAM: argmins cannot fit, joint must
+        cap = ResourceBudget(bram=max(2, int(indep.bram * 0.6)))
+        assert not cap.admits(indep), \
+            f"{arch}: baseline unexpectedly fits the cap"
+        t0 = time.perf_counter()
+        ticket = svc.submit_joint(program, budget=cap, opts=opts,
+                                  use_cache=False)
+        jplan = ticket.result(timeout=300)
+        joint_s = time.perf_counter() - t0
+        assert jplan.feasible and jplan.fits(), \
+            f"{arch}: joint selection failed to fit the budget"
+        for name, m in jplan.members.items():
+            assert m.trivial or m.certified, \
+                f"{arch}:{name} selected scheme is uncertified"
+        traded = sorted(
+            name for name, m in jplan.members.items()
+            if m.chosen.describe() != plans[name].best.describe())
+        joint = jplan.total_use
+        out[arch] = {
+            "memories": sorted(jplan.members),
+            "independent": indep.as_dict(),
+            "budget": cap.as_dict(),
+            "joint": joint.as_dict(),
+            "independent_fits": cap.admits(indep),
+            "joint_fits": jplan.fits(),
+            "traded_down": traded,
+            "members": jplan.as_dict()["members"],
+            "independent_s": round(indep_s, 4),
+            "joint_s": round(joint_s, 4),
+            "stats": {k: getattr(svc.stats, k) for k in
+                      ("joint_submits", "joint_solved", "joint_reselects",
+                       "joint_infeasible", "joint_cert_evictions",
+                       "certified")},
+        }
+        print(f"joint_plan_{arch.replace('-', '_')},{joint_s*1e6:.0f},"
+              f"bram={indep.bram}->{joint.bram}(cap {cap.bram});"
+              f"traded={'+'.join(traded) or 'none'};"
+              f"certified={svc.stats.certified}")
+        svc.shutdown()
+    # headline: on every config the budgeted joint plan fits where the
+    # independent argmins do not
+    assert all(r["joint_fits"] and not r["independent_fits"]
+               for r in out.values())
+    with open("results/BENCH_joint_plan.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
 BENCHES = {
+    "joint_plan": bench_joint_plan,
     "multi_tenant": bench_multi_tenant,
     "solver": lambda fast: bench_solver(),
     "planner_cache": lambda fast: bench_planner_cache(),
@@ -667,6 +748,7 @@ def main() -> None:
     bench_solver_shards(args.fast)
     bench_solve_fabric(args.fast)
     bench_multi_tenant(args.fast)
+    bench_joint_plan(args.fast)
     bench_feedback_scorer(args.fast)
     bench_certify(args.fast)
     bench_kernels()

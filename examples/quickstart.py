@@ -67,6 +67,20 @@ section below runs the whole story on one service;
 ``launch/serve_fleet.py`` scales it to three real model servers
 (transformer / MoE / SSM) on one shared planning plane.
 
+Finally, planning is **joint**: a model serves through *several* banked
+memories at once (KV pool + MoE dispatch + SSM state), and the fabric
+they share has ONE budget.  ``service.submit_joint`` bundles every
+memory of a Program into one ``JointTicket``: each member solve keeps a
+small Pareto frontier (cost x resources) instead of a single argmin, an
+exact co-selection picks one scheme per memory minimizing total cost
+under the shared ``ResourceBudget``, and a trivial single-bank point on
+every frontier means a selection always exists -- an infeasible budget
+degrades gracefully, never raises.  With slack budget the joint answer
+is *identical* to independent planning; under pressure it trades the
+cheapest memory down so the whole model fits.  A server built on the
+joint ticket promotes ALL its pools atomically between decode ticks
+(``launch/serve.py --joint --budget-bram N``).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -291,6 +305,44 @@ def main():
     print(f"tenancy  : nightly deferred {n_deferred}/4 cold solves while "
           f"web's solved; per-tenant slices reconcile exactly: {exact}")
     shared.shutdown()
+
+    # JOINT: one model, many banked memories, ONE fabric budget.  A
+    # two-memory Program (a KV pool and an MoE dispatch table) goes
+    # through submit_joint: each member keeps a Pareto frontier of
+    # (cost, resources) schemes, and an exact co-selection picks one
+    # scheme per memory minimizing total cost under the shared budget.
+    from repro.core import ResourceBudget
+    kv = MemorySpec("kv", dims=(256,), word_bits=16, ports=1)
+    disp = MemorySpec("disp", dims=(128,), word_bits=32, ports=1)
+    joint_prog = Program(
+        root=Ctrl("model", Sched.FORKJOIN, children=[
+            Ctrl("attn", Sched.INNER,
+                 counters=[Counter("r", 0, 1, 32, par=8)],
+                 accesses=[AccessDecl("kv", (Affine.of(r=1),))]),
+            Ctrl("route", Sched.INNER,
+                 counters=[Counter("e", 0, 1, 32, par=4)],
+                 accesses=[AccessDecl("disp", (Affine.of(e=1),))]),
+        ]),
+        memories={"kv": kv, "disp": disp},
+    )
+    jsvc = PlanService(workers=2)
+    # slack budget: the joint answer IS the independent answer
+    slack = jsvc.submit_joint(joint_prog).result(timeout=120)
+    free_use = slack.total_use
+    print(f"joint    : slack budget -> "
+          f"{[m.chosen.num_banks for m in slack.members.values()]} banks "
+          f"per memory, total {free_use.as_dict()}")
+    # tight budget: independent planning would NOT fit -- joint
+    # co-selection trades the cheapest memory down so the model does
+    tight = ResourceBudget(bram=max(2, int(free_use.bram * 0.6)))
+    squeezed = jsvc.submit_joint(joint_prog, budget=tight,
+                                 use_cache=False).result(timeout=120)
+    assert squeezed.fits() and squeezed.feasible
+    assert not tight.admits(free_use)          # independent would blow it
+    print(f"joint    : bram {free_use.bram} -> cap {tight.bram}: "
+          f"co-selected {squeezed.total_use.bram} "
+          f"(fits={squeezed.fits()}, independent would not)")
+    jsvc.shutdown()
 
 
 if __name__ == "__main__":

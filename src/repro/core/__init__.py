@@ -63,8 +63,22 @@ from .planner import (
     resolve_scorer,
     set_ml_scorer_path,
 )
+from .jointplan import (
+    FrontierPoint,
+    JointMember,
+    JointPlan,
+    JointRequest,
+    JointSelection,
+    ResourceBudget,
+    ResourceUse,
+    co_select,
+    joint_signature,
+    pareto_frontier,
+    trivial_solution,
+)
 from .polytope import Access, AccessGroup, Affine, Iterator, MemorySpec
 from .service import (
+    JointTicket,
     PlanService,
     PlanTicket,
     StaleWhileRevalidate,
@@ -89,22 +103,26 @@ __all__ = [
     "BankingLayout",
     "BankingPlan", "BankingPlanner", "BankingSolution", "Candidate",
     "CandidateSpace", "CompiledBankingPlan", "Counter", "Ctrl", "CutGate",
-    "DirectoryStore", "FlatGeometry", "Iterator", "MeasuredCost",
+    "DirectoryStore", "FlatGeometry", "FrontierPoint", "Iterator",
+    "JointMember", "JointPlan", "JointRequest", "JointSelection",
+    "JointTicket", "MeasuredCost",
     "MeasuredScorer", "MemorySpec", "MemoryStore", "MultiDimGeometry",
     "PlanRequest", "PlanService", "PlanStore", "PlanTicket",
-    "PreparedRequest", "Program", "QOS_CLASSES", "QoSClass", "Sched",
+    "PreparedRequest", "Program", "QOS_CLASSES", "QoSClass",
+    "ResourceBudget", "ResourceUse", "Sched",
     "ServiceTelemetry",
     "SolutionReducer", "SolveFabric", "SolveShard", "SolverOptions",
     "StaleWhileRevalidate", "TelemetryConfig", "TelemetryLog",
     "TenantRegistry", "Unroll",
-    "as_compiled", "build_groups", "canonical_signature",
+    "as_compiled", "build_groups", "canonical_signature", "co_select",
     "compile_geometry", "compile_plan", "compile_solution",
     "compile_trivial", "default_planner", "default_service",
     "default_telemetry_log", "evaluate", "evaluate_parallel",
-    "family_signature", "lane_compile", "program_signature",
+    "family_signature", "joint_signature", "lane_compile",
+    "pareto_frontier", "program_signature",
     "rank_solutions", "register_scorer", "registered_scorers",
     "resolve_scorer", "roofline_prior_seconds", "scheme_hash",
     "set_ml_scorer_path", "shard_from_indices", "solve",
     "solve_monolithic", "solve_space", "space_from_wire", "space_to_wire",
-    "spawn_local_workers", "unroll",
+    "spawn_local_workers", "trivial_solution", "unroll",
 ]

@@ -37,9 +37,7 @@ import hashlib
 import json
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from concurrent.futures import TimeoutError as FutureTimeoutError
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, replace
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
@@ -398,17 +396,55 @@ class BankingPlan:
 
     # -- tabulation ------------------------------------------------------------
     def table_row(self) -> Dict[str, float]:
-        """One benchmark-table row for the chosen scheme."""
+        """One benchmark-table row for the chosen scheme, including the
+        budget axes joint planning accounts in (physical banks x
+        duplicates, total bank volume)."""
         b = self.best
         r = b.resources.total if b is not None and b.resources else None
+        banks = (b.num_banks * max(1, b.duplicates)) if b else 0
         return {
             "memory": self.memory,
             "lut": r.lut if r else float("nan"),
             "ff": r.ff if r else float("nan"),
             "bram": r.bram if r else 0,
             "dsp": r.dsp if r else 0,
-            "banks": b.num_banks if b else 0,
+            "banks": banks,
+            "volume": banks * (b.bank_volume if b else 0),
             "seconds": self.solve_seconds,
+        }
+
+    def as_dict(self) -> dict:
+        """Budget-accounting view of the chosen scheme: provenance plus
+        the full :class:`~repro.core.resources.SchemeResources`
+        breakdown, so budget sums and the joint bench never reach into
+        ``core/`` internals."""
+        def est(e: Optional[ResourceEstimate]) -> Optional[dict]:
+            if e is None:
+                return None
+            return {"lut": e.lut, "ff": e.ff, "bram": e.bram, "dsp": e.dsp}
+
+        b = self.best
+        res = b.resources if b is not None else None
+        banks = (b.num_banks * max(1, b.duplicates)) if b else 0
+        return {
+            "memory": self.memory,
+            "signature": self.signature,
+            "status": self.status,
+            "scorer": self.scorer_name,
+            "seconds": self.solve_seconds,
+            "score": float(b.score) if b is not None else None,
+            "kind": b.kind if b is not None else None,
+            "banks": banks,
+            "bank_volume": b.bank_volume if b is not None else 0,
+            "volume": banks * (b.bank_volume if b else 0),
+            "duplicates": b.duplicates if b is not None else 0,
+            "resources": None if res is None else {
+                "total": est(res.total),
+                "crossbar": est(res.crossbar),
+                "resolution": est(res.resolution),
+                "storage": est(res.storage),
+            },
+            "error": self.error,
         }
 
     # -- serialization -------------------------------------------------------
@@ -967,30 +1003,48 @@ class BankingPlanner:
                  opts: Optional[SolverOptions] = None,
                  scorer: ScorerLike = None,
                  timeout: Optional[float] = None,
-                 max_workers: Optional[int] = None
-                 ) -> Dict[str, BankingPlan]:
+                 max_workers: Optional[int] = None,
+                 budget=None) -> Dict[str, BankingPlan]:
         """Plan every memory of ``program`` concurrently.
 
-        Each memory gets its own solver thread and its own ``timeout``
-        budget (measured from when its result is collected, so memories
-        queued behind a full pool are not charged for earlier solves); a
-        memory that exceeds it yields a plan with ``status='timeout'`` and
-        ``best=None`` (its solve keeps running in the background and will
-        populate the cache for the next request).
+        Rides the service's joint ticket graph: one
+        :meth:`PlanService.submit_joint` fans the member solves across
+        the service's own worker pool (or fabric).  ``budget=None``
+        keeps the historical independent selection -- each memory's plan
+        carries its own argmin scheme.  With a
+        :class:`~repro.core.jointplan.ResourceBudget`, each returned
+        plan's ``best`` is instead the **jointly co-selected** scheme
+        for that memory (possibly a cheaper point off its Pareto
+        frontier, or the trivial single-bank fallback under pressure);
+        the full :class:`~repro.core.jointplan.JointPlan` is available
+        via ``submit_joint`` directly.
+
+        Each memory gets its own ``timeout`` budget (measured from when
+        its result is collected, so memories queued behind a full pool
+        are not charged for earlier solves); a memory that exceeds it
+        yields a plan with ``status='timeout'`` and ``best=None`` (its
+        solve keeps running in the background and will populate the
+        cache for the next request).  ``max_workers`` is accepted for
+        compatibility; the service pool sizes the fan-out.
         """
+        del max_workers   # the service's worker pool drains the graph
         names = list(program.memories)
-        workers = max_workers or self.max_workers or min(8, max(1, len(names)))
         out: Dict[str, BankingPlan] = {}
-        ex = ThreadPoolExecutor(max_workers=workers)
-        futs = {
-            name: ex.submit(self.plan, program, name,
-                            opts=opts, scorer=scorer)
-            for name in names
-        }
-        for name, fut in futs.items():
+        try:
+            joint = self.service.submit_joint(program, opts=opts,
+                                              scorer=scorer, budget=budget)
+        except Exception as e:   # prepare-time refusal: honest per-memory
+            return {name: BankingPlan(
+                memory=name, signature="", best=None,
+                status="error", created_at=time.time(),
+                opts=opts or self.opts, error=repr(e)) for name in names}
+        for name in names:
+            ticket = joint.members.get(name)
+            if ticket is None:   # store-answered joint: members in plan
+                continue
             try:
-                out[name] = fut.result(timeout=timeout)
-            except FutureTimeoutError:
+                out[name] = ticket.result(timeout=timeout)
+            except TimeoutError:
                 out[name] = BankingPlan(
                     memory=name, signature="", best=None,
                     status="timeout", created_at=time.time(),
@@ -1001,9 +1055,25 @@ class BankingPlanner:
                     memory=name, signature="", best=None,
                     status="error", created_at=time.time(),
                     opts=opts or self.opts, error=repr(e))
-        # wait=False: a timed-out solve finishes in the background and
-        # populates the cache for the next request instead of blocking here
-        ex.shutdown(wait=False)
+        if budget is not None or not out:
+            # co-selected schemes replace the independent argmins; a
+            # member that timed out here keeps its honest timeout plan
+            # (the joint selection holds its trivial stand-in)
+            if joint.wait(timeout=timeout):
+                jplan = joint.result()
+                for name, m in jplan.members.items():
+                    p = out.get(name)
+                    if p is None:
+                        out[name] = BankingPlan(
+                            memory=name, signature=m.signature,
+                            best=m.chosen, status=jplan.status,
+                            scorer_name=jplan.scorer_name,
+                            created_at=jplan.created_at,
+                            opts=opts or self.opts, error=m.error)
+                    elif budget is not None \
+                            and p.status not in ("timeout", "error") \
+                            and m.chosen is not None:
+                        out[name] = replace(p, best=m.chosen)
         return out
 
 

@@ -65,7 +65,7 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..runtime.tenancy import (
     DEFAULT_TENANT,
@@ -84,6 +84,18 @@ from .planner import (
     ScorerLike,
     default_planner,
     resolve_scorer,
+)
+from .jointplan import (
+    FrontierPoint,
+    JointMember,
+    JointPlan,
+    JointRequest,
+    JointSelection,
+    ResourceBudget,
+    co_select,
+    joint_signature,
+    pareto_frontier,
+    trivial_solution,
 )
 from .polytope import MemorySpec
 from .solver import BankingSolution, SolverOptions
@@ -159,6 +171,7 @@ class PlanTicket:
         self._best_arts: Dict[Tuple[int, str], CompiledBankingPlan] = {}
         self._final_version = 0
         self._claimed = False
+        self._callbacks: List[Callable[["PlanTicket"], None]] = []
         self._lock = threading.Lock()
 
     # -- completion ------------------------------------------------------------
@@ -299,16 +312,356 @@ class PlanTicket:
         self.status = "done"
         self.resolved_at = time.time()
         self._event.set()
+        self._fire_callbacks()
 
     def _fail(self, exc: BaseException) -> None:
         self._error = exc
         self.status = "error"
         self.resolved_at = time.time()
         self._event.set()
+        self._fire_callbacks()
+
+    # -- completion callbacks ------------------------------------------------------
+    def add_done_callback(self, fn: Callable[["PlanTicket"], None]) -> None:
+        """Call ``fn(ticket)`` when this ticket resolves or fails.
+
+        Fires on the resolving thread; a ticket that is already done
+        fires immediately on the caller's.  This is how a joint ticket
+        graph re-co-selects as member solves land -- callbacks must not
+        block (or re-enter the service's submit path)."""
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _fire_callbacks(self) -> None:
+        with self._lock:
+            cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            try:
+                fn(self)
+            except Exception:   # a consumer's bug must not kill the solve
+                pass
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"<PlanTicket {self.memory} {self.signature[:16]}... "
                 f"{self.status}>")
+
+
+class JointTicket:
+    """Future-like handle for one whole-model joint planning problem.
+
+    A ticket *graph*: one member :class:`PlanTicket` per memory, fanned
+    out through the service's normal executors (pool or fabric, one
+    tenant unit), plus a co-selection layer on top.  ``selection()``
+    re-co-selects progressively as member solves land and best-so-far
+    schemes improve -- ``best_so_far`` semantics lifted to the group --
+    and ``best_version()`` bumps only when the *joint* selection
+    actually changes, so pollers (the serving runtime's coherent
+    multi-pool swap) re-lower only on improvement.  Once every member is
+    terminal the final co-selection certifies each selected non-trivial
+    scheme, persists as a :class:`~repro.core.jointplan.JointPlan`, and
+    ``result()`` returns it.
+
+    One member's failure (solver error, certifier refusal, admission
+    shed) never poisons the group: that memory degrades to the trivial
+    single-bank scheme and co-selection continues over the rest.
+    """
+
+    def __init__(self, *, service: "PlanService", request: JointRequest,
+                 preps: Dict[str, PreparedRequest], signature: str,
+                 scorer_name: str, verify: str = "off",
+                 tenant: str = DEFAULT_TENANT):
+        self._service = service
+        self.request = request
+        self.signature = signature
+        self.scorer_name = scorer_name
+        self.verify = verify
+        self.tenant = tenant
+        self.budget = request.budget
+        self.frontier_cap = max(2, int(request.frontier_cap))
+        self.submitted_at = time.time()
+        self.resolved_at: Optional[float] = None
+        self.status = "queued"
+        self.members: Dict[str, PlanTicket] = {}
+        self._preps = preps
+        self._event = threading.Event()
+        self._plan: Optional[JointPlan] = None
+        self._error: Optional[BaseException] = None
+        self._pending = 0
+        self._finalized = False
+        self._version = 0
+        self._stamp: Optional[tuple] = None
+        self._selection: Optional[JointSelection] = None
+        self._sel_key: Optional[tuple] = None
+        self._trivials: Dict[str, BankingSolution] = {}
+        self._arts: Dict[Tuple[int, str], Dict[str, CompiledBankingPlan]] = {}
+        self._certified: Dict[Tuple[str, tuple], Optional[dict]] = {}
+        self._lock = threading.Lock()
+
+    # -- completion ------------------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> JointPlan:
+        """The final joint plan; blocks up to ``timeout`` seconds."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"joint plan {self.signature} not solved within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._plan
+
+    # -- wiring (service-internal) ----------------------------------------------
+    def _register(self, name: str, ticket: PlanTicket) -> None:
+        self.members[name] = ticket
+        self._pending += 1
+
+    def _arm(self) -> None:
+        """Subscribe to every member's completion.  Called once, after
+        all members are registered; a member that is already done (sync
+        cache hit, shed) fires its callback immediately on this
+        thread."""
+        self.status = "solving"
+        for name, t in self.members.items():
+            t.add_done_callback(lambda _t, n=name: self._member_done(n))
+
+    def _resolve_cached(self, plan: JointPlan) -> None:
+        """Born-done path: the store already held this joint plan."""
+        self._plan = plan
+        self._finalized = True
+        self.status = "done"
+        self.resolved_at = time.time()
+        self._event.set()
+
+    def _member_done(self, name: str) -> None:
+        with self._lock:
+            self._pending -= 1
+            last = self._pending == 0 and not self._finalized
+            if last:
+                self._finalized = True
+        if last:
+            try:
+                self._finalize()
+            except BaseException as e:
+                self._error = e
+                self.status = "error"
+                self.resolved_at = time.time()
+                self._event.set()
+
+    # -- frontiers -------------------------------------------------------------
+    def _trivial_for(self, name: str) -> BankingSolution:
+        with self._lock:
+            sol = self._trivials.get(name)
+        if sol is None:
+            prep = self._preps[name]
+            sol = trivial_solution(prep.mem, prep.groups, prep.iterators,
+                                   prep.opts)
+            with self._lock:
+                self._trivials[name] = sol
+        return sol
+
+    def _frontier_for(self, name: str) -> "List[FrontierPoint]":
+        """The member's current frontier: its full solved frontier once
+        done, its best-so-far singleton while solving, trivial-only
+        after a failure -- always non-empty."""
+        t = self.members[name]
+        sols: List[BankingSolution] = []
+        if t.done():
+            if t._error is None and t._plan is not None:
+                # a disk-hydrated plan carries only its best scheme;
+                # fresh and memory-cached plans keep the whole ranking
+                sols = list(t._plan.solutions) or (
+                    [t._plan.best] if t._plan.best is not None else [])
+        else:
+            best = t.best_so_far()
+            if best is not None:
+                sols = [best]
+        return pareto_frontier(sols, trivial=self._trivial_for(name),
+                               cap=self.frontier_cap)
+
+    # -- progressive co-selection ------------------------------------------------
+    def selection(self) -> JointSelection:
+        """The current joint co-selection over whatever each member has
+        produced so far (recomputed only when some member's state
+        changed).  Pure function of member frontiers + budget, so the
+        answer is invariant to the order solves happen to land in."""
+        if self._event.is_set() and self._plan is not None:
+            return self._final_selection()
+        stamp = tuple((n, t.status, t.done(), t.best_version())
+                      for n, t in sorted(self.members.items()))
+        with self._lock:
+            if stamp == self._stamp and self._selection is not None:
+                return self._selection
+        frontiers = {n: self._frontier_for(n) for n in self.members}
+        sel = co_select(frontiers, self.budget)
+        with self._lock:
+            if sel.key() != self._sel_key:
+                self._version += 1
+                self._sel_key = sel.key()
+                self._service.stats.bump("joint_reselects",
+                                         tenant=self.tenant)
+            self._stamp = stamp
+            self._selection = sel
+        return sel
+
+    def _final_selection(self) -> JointSelection:
+        picks = {}
+        for name, m in self._plan.members.items():
+            sol = m.chosen if m.chosen is not None \
+                else self._trivial_for(name)
+            picks[name] = FrontierPoint(
+                solution=sol, use=m.use, score=m.score, trivial=m.trivial)
+        return JointSelection(picks=picks, total_use=self._plan.total_use,
+                              total_score=self._plan.total_score,
+                              feasible=self._plan.feasible)
+
+    def best_version(self) -> int:
+        """Monotone counter: bumps each time the joint selection
+        changes.  Poll it to re-lower/promote only on improvement."""
+        if not self._event.is_set():
+            self.selection()
+        with self._lock:
+            return self._version
+
+    # -- artifacts ---------------------------------------------------------------
+    def artifacts(self, backend: str = "jax"
+                  ) -> Dict[str, CompiledBankingPlan]:
+        """Compiled artifacts of the current joint selection, one per
+        memory -- lowered and cached per selection version, so polling
+        between decode ticks re-lowers only when the selection moved."""
+        sel = self.selection()
+        with self._lock:
+            version = self._version
+            cached = self._arts.get((version, backend))
+        if cached is not None:
+            return dict(cached)
+        arts: Dict[str, CompiledBankingPlan] = {}
+        for name, pick in sel.picks.items():
+            prep = self._preps[name]
+            if pick.trivial:
+                arts[name] = self._service.trivial_artifact(prep.mem,
+                                                            backend=backend)
+            else:
+                art = compile_solution(pick.solution,
+                                       signature=prep.signature,
+                                       backend=backend,
+                                       scorer_name=self.scorer_name)
+                hub = self._service.telemetry
+                if hub is not None:
+                    hub.instrument(art)
+                arts[name] = art
+        with self._lock:
+            # keep only the newest version per backend
+            for k in [k for k in self._arts if k[1] == backend]:
+                del self._arts[k]
+            self._arts[(version, backend)] = arts
+        return dict(arts)
+
+    def fallback(self, backend: str = "jax"
+                 ) -> Dict[str, CompiledBankingPlan]:
+        """Immediately executable artifacts for every member (each
+        member ticket's own fallback discipline) -- serve now, swap to
+        ``artifacts()`` as the joint selection lands."""
+        return {name: t.fallback(backend)
+                for name, t in self.members.items()}
+
+    # -- finalization ------------------------------------------------------------
+    def _certify_pick(self, name: str, pick: "FrontierPoint"
+                      ) -> Tuple[bool, Optional[dict]]:
+        """Certify one selected scheme (cached per scheme); returns
+        (ok, certificate-JSON)."""
+        key = (name, pick.key())
+        with self._lock:
+            if key in self._certified:
+                cert = self._certified[key]
+                return cert is not None, cert
+        from ..analysis.certify import certify_solution
+        prep = self._preps[name]
+        res = certify_solution(pick.solution, prep.groups, prep.iterators,
+                               signature=prep.signature,
+                               scorer=self.scorer_name)
+        cert = (res.certificate.to_json()
+                if res.ok and res.certificate is not None else None)
+        with self._lock:
+            self._certified[key] = cert
+        return res.ok, cert
+
+    def _finalize(self) -> None:
+        """Every member is terminal: run the final co-selection, certify
+        each selected scheme, persist, resolve.
+
+        A certifier refusal evicts just that scheme from its member's
+        frontier and re-co-selects -- the group never fails for one bad
+        member, it degrades that member (ultimately to trivial, which
+        needs no certificate because it serializes instead of banking).
+        """
+        service = self._service
+        frontiers = {n: self._frontier_for(n) for n in self.members}
+        certs: Dict[str, Optional[dict]] = {}
+        while True:
+            sel = co_select(frontiers, self.budget)
+            if self.verify == "off":
+                break
+            evicted = False
+            for name, pick in sorted(sel.picks.items()):
+                if pick.trivial:
+                    continue
+                ok, cert = self._certify_pick(name, pick)
+                if ok:
+                    certs[name] = cert
+                else:
+                    frontiers[name] = [p for p in frontiers[name]
+                                       if p.key() != pick.key()]
+                    service.stats.bump("joint_cert_evictions",
+                                       tenant=self.tenant)
+                    evicted = True
+            if not evicted:
+                break
+        members: Dict[str, JointMember] = {}
+        for name, pick in sel.picks.items():
+            t = self.members[name]
+            if t.done() and t._error is None and t._plan is not None:
+                status, error = t._plan.status, t._plan.error
+            else:
+                status = "error"
+                error = repr(t._error) if t._error is not None else ""
+            cert = None if pick.trivial else certs.get(name)
+            members[name] = JointMember(
+                memory=name, signature=t.signature, status=status,
+                chosen=pick.solution, trivial=pick.trivial,
+                certified=cert is not None, certificate=cert,
+                score=float(pick.solution.score), use=pick.use,
+                error=error)
+        plan = JointPlan(
+            signature=self.signature, members=members, budget=self.budget,
+            feasible=sel.feasible, scorer_name=self.scorer_name,
+            status="solved", solve_seconds=time.time() - self.submitted_at,
+            created_at=time.time(),
+            opts=next(iter(self._preps.values())).opts)
+        store = service.planner.store
+        if store is not None and self.request.use_cache:
+            store.put_joint(plan)
+        service.stats.bump("joint_solved", tenant=self.tenant)
+        if not sel.feasible:
+            service.stats.bump("joint_infeasible", tenant=self.tenant)
+        with self._lock:
+            if sel.key() != self._sel_key:
+                self._version += 1
+                self._sel_key = sel.key()
+            self._selection = sel
+        self._plan = plan
+        self.status = "done"
+        self.resolved_at = time.time()
+        self._event.set()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"<JointTicket {self.signature[:16]}... "
+                f"{len(self.members)} members {self.status}>")
 
 
 @dataclass
@@ -341,6 +694,12 @@ class ServiceStats:
     cert_failures: int = 0   # solver outputs refused by the certifier
     cert_rejected: int = 0   # fabric result batches rejected + requeued
     lint_errors: int = 0     # submits refused by the pre-solve lint pass
+    joint_submits: int = 0   # whole-model submit_joint calls
+    joint_sync_hits: int = 0  # joint tickets answered from the store
+    joint_solved: int = 0    # joint tickets resolved with a selection
+    joint_reselects: int = 0  # progressive co-selections as members landed
+    joint_infeasible: int = 0  # budgets under even the all-trivial floor
+    joint_cert_evictions: int = 0  # selected schemes refused + re-selected
     # per-tenant slices (global counters include every slice; a slice
     # never has its own sub-slices)
     tenants: Dict[str, "ServiceStats"] = field(default_factory=dict,
@@ -513,6 +872,10 @@ class PlanService:
         self._inflight: Dict[Tuple[str, str], PlanTicket] = {}
         self._trivial: Dict[Tuple, CompiledBankingPlan] = {}
         self._threads = []
+        # queued + claimed-but-unfinished items; counted at enqueue time
+        # (not from qsize()) so worker sizing can't race a fast pop
+        self._outstanding = 0
+        self._demand = threading.Lock()
         self._max_workers = max(1, int(workers))
         # None = adaptive: sized per problem from its candidate space
         self.shard_budget = (max(1, int(shard_budget))
@@ -647,8 +1010,8 @@ class PlanService:
                     if not inflight.deferred:
                         # re-enqueue the same ticket at the new
                         # priority; _claim() makes later pops no-ops
-                        self._queue.put((priority, next(self._seq),
-                                         inflight._prep, inflight))
+                        self._enqueue((priority, next(self._seq),
+                                       inflight._prep, inflight))
                 return inflight
             stale = self.revalidate.pick(self.planner, prep)
             if stale is not None:
@@ -679,8 +1042,82 @@ class PlanService:
             ticket.status = "shed"
             return ticket
         self.stats.bump("queued", tenant=ten.name)
-        self._queue.put((priority, next(self._seq), prep, ticket))
+        self._enqueue((priority, next(self._seq), prep, ticket))
         self._ensure_workers()
+        return ticket
+
+    # -- whole-model joint planning ----------------------------------------------
+    def submit_joint(self, request, *,
+                     memories: Optional[Sequence[str]] = None,
+                     budget: Optional[ResourceBudget] = None,
+                     opts: Optional[SolverOptions] = None,
+                     scorer: ScorerLike = None,
+                     use_cache: bool = True,
+                     frontier_cap: int = 8,
+                     priority: int = 0,
+                     shard_budget: Optional[int] = None,
+                     executor: Optional[str] = None,
+                     verify: Optional[str] = None,
+                     tenant: Optional[str] = None) -> JointTicket:
+        """Pose one whole-model planning problem; returns a
+        :class:`JointTicket`.
+
+        ``request`` is a :class:`~repro.core.jointplan.JointRequest` or
+        a bare ``Program`` (then ``memories``/``budget``/``opts``/
+        ``scorer`` apply).  Each memory's solve fans out through the
+        normal executors exactly like a ``submit`` -- same sharding,
+        fabric, stale-while-revalidate, and verification -- but all
+        members submit as **one tenant unit** (same tenant, admission
+        quotas serialize them honestly; a shed member degrades to its
+        trivial scheme instead of failing the group) and the ticket
+        co-selects one scheme per memory under the shared ``budget``
+        instead of taking each argmin.  A warm ``joint/`` store entry
+        answers before any member submits (ticket born ``done``).
+        """
+        if isinstance(request, JointRequest):
+            req = request
+        else:
+            req = JointRequest(program=request, memories=memories,
+                               budget=budget, opts=opts, scorer=scorer,
+                               use_cache=use_cache,
+                               frontier_cap=frontier_cap)
+        names = req.memory_names()
+        if not names:
+            raise ValueError("joint request names no memories")
+        verify = verify if verify is not None else self.verify
+        if verify not in VERIFY_MODES:
+            raise ValueError(
+                f"unknown verify mode {verify!r}; one of {VERIFY_MODES}")
+        ten = self.tenants.resolve(tenant)
+        # member prep is the same cheap inline half as submit(): bad
+        # memories and unknown scorers raise here, on the caller
+        preps = {name: self.planner.prepare(req.program, name,
+                                            opts=req.opts, scorer=req.scorer,
+                                            use_cache=req.use_cache)
+                 for name in names}
+        scorer_name = next(iter(preps.values())).scorer_name
+        signature = joint_signature(
+            {n: p.signature for n, p in preps.items()}, scorer_name,
+            req.budget)
+        self.stats.bump("joint_submits", tenant=ten.name)
+        ticket = JointTicket(service=self, request=req, preps=preps,
+                             signature=signature, scorer_name=scorer_name,
+                             verify=verify, tenant=ten.name)
+        if req.use_cache and self.planner.store is not None:
+            cached = self.planner.store.get_joint(signature)
+            if cached is not None:
+                self.stats.bump("joint_sync_hits", tenant=ten.name)
+                ticket._resolve_cached(cached)
+                return ticket
+        # fan out the member solves -- one tenant unit; registration
+        # completes before arming so a flurry of sync hits cannot
+        # finalize a half-registered graph
+        for name, prep in preps.items():
+            member = self.submit_prepared(
+                prep, priority=priority, shard_budget=shard_budget,
+                executor=executor, verify=verify, tenant=tenant)
+            ticket._register(name, member)
+        ticket._arm()
         return ticket
 
     # -- immediate artifacts -------------------------------------------------------
@@ -743,12 +1180,20 @@ class PlanService:
         return verify
 
     # -- worker pool ----------------------------------------------------------------
+    def _enqueue(self, item) -> None:
+        """All work lands through here so ``_outstanding`` counts queued
+        AND claimed-but-unfinished items -- a worker that already popped
+        a long (or gated) solve must not hide demand, or one slow joint
+        member would serialize the rest of its graph."""
+        with self._demand:
+            self._outstanding += 1
+        self._queue.put(item)
+
     def _ensure_workers(self) -> None:
         with self._lock:
             if self._shutdown:
                 raise RuntimeError("PlanService is shut down")
-            want = min(self._max_workers,
-                       max(1, self._queue.qsize()))
+            want = min(self._max_workers, max(1, self._outstanding))
             while len(self._threads) < want:
                 t = threading.Thread(
                     target=self._worker, daemon=True,
@@ -781,6 +1226,9 @@ class PlanService:
                 else:
                     self._finish(ticket, payload, plan=plan)
             finally:
+                if item[2] is not _SENTINEL:
+                    with self._demand:
+                        self._outstanding -= 1
                 self._queue.task_done()
 
     def _launch_shards(self, prep: PreparedRequest,
@@ -836,8 +1284,8 @@ class PlanService:
             self.stats.bump("shards_spawned", len(shards),
                             tenant=ticket.tenant)
         for shard in shards:
-            self._queue.put((ticket.priority, next(self._seq),
-                             _ShardJob(state=state, shard=shard), ticket))
+            self._enqueue((ticket.priority, next(self._seq),
+                           _ShardJob(state=state, shard=shard), ticket))
         self._ensure_workers()
 
     def _run_fabric_solve(self, prep: PreparedRequest, ticket: PlanTicket,
@@ -948,7 +1396,7 @@ class PlanService:
             if t2.status == "deferred":
                 t2.status = "queued"
             self.stats.bump("queued", tenant=t2.tenant)
-            self._queue.put((t2.priority, next(self._seq), prep2, t2))
+            self._enqueue((t2.priority, next(self._seq), prep2, t2))
             try:
                 self._ensure_workers()
             except RuntimeError:
@@ -1008,6 +1456,7 @@ def default_service() -> PlanService:
 
 
 __all__ = [
+    "JointTicket",
     "PlanService",
     "PlanTicket",
     "ServiceStats",

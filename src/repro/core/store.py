@@ -125,6 +125,16 @@ class PlanStore(abc.ABC):
         """Persist a conflict certificate beside its plan (no-op for
         stores without certificate support)."""
 
+    # -- joint-plan sidecar ------------------------------------------------------
+    def get_joint(self, signature: str):
+        """Persisted :class:`~repro.core.jointplan.JointPlan` for one
+        ``jp1-`` joint signature (``None`` when the store keeps none)."""
+        return None
+
+    def put_joint(self, plan) -> None:
+        """Persist a whole-model joint plan (no-op for stores without
+        joint-plan support)."""
+
     # -- demotion ---------------------------------------------------------------
     def delete(self, signature: str, scorer_name: str) -> None:
         """Drop a stored plan and its compiled artifacts -- how demotion
@@ -144,6 +154,7 @@ class MemoryStore(PlanStore):
         self._artifacts: Dict[Tuple[str, str, str], CompiledBankingPlan] = {}
         self._telemetry: Dict[str, Dict[tuple, object]] = {}
         self._certs: Dict[Tuple[str, str], dict] = {}
+        self._joint: Dict[str, object] = {}
         self._lock = threading.Lock()
 
     def get(self, signature: str, scorer_name: str):
@@ -196,6 +207,14 @@ class MemoryStore(PlanStore):
         with self._lock:
             self._certs[(signature, scorer_name)] = cert
 
+    def get_joint(self, signature: str):
+        with self._lock:
+            return self._joint.get(signature)
+
+    def put_joint(self, plan) -> None:
+        with self._lock:
+            self._joint[plan.signature] = plan
+
     def delete(self, signature: str, scorer_name: str) -> None:
         with self._lock:
             self._plans.pop((signature, scorer_name), None)
@@ -210,6 +229,7 @@ class MemoryStore(PlanStore):
             self._artifacts.clear()
             self._telemetry.clear()
             self._certs.clear()
+            self._joint.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +478,39 @@ class DirectoryStore(PlanStore):
                 path.parent.mkdir(parents=True, exist_ok=True)
                 tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
                 tmp.write_text(json.dumps(cert, indent=1, sort_keys=True))
+                tmp.replace(path)
+        except (TimeoutError, OSError):
+            pass  # best-effort, like every other durable write here
+
+    # -- joint-plan sidecar ------------------------------------------------------
+    def joint_path(self, signature: str) -> Path:
+        return self.path / "joint" / f"{signature}.json"
+
+    def get_joint(self, signature: str):
+        """Lock-free read of one joint plan -- torn or foreign JSON
+        reads as None, same discipline as plan reads.  ``joint/`` holds
+        ``jp1-*`` whole-model selections, outside the plan LRU cap."""
+        from .jointplan import JointPlan
+
+        p = self.joint_path(signature)
+        try:
+            plan = JointPlan.from_json(json.loads(p.read_text()))
+        except _MISS_ERRORS:
+            return None
+        self._touch(p)
+        plan.status = "cached-disk"
+        return plan
+
+    def put_joint(self, plan) -> None:
+        """Atomic tmp+rename write under the store lock, mirroring the
+        certificate sidecar."""
+        path = self.joint_path(plan.signature)
+        try:
+            with self._lock():
+                path.parent.mkdir(parents=True, exist_ok=True)
+                tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
+                tmp.write_text(json.dumps(plan.to_json(), indent=1,
+                                          sort_keys=True))
                 tmp.replace(path)
         except (TimeoutError, OSError):
             pass  # best-effort, like every other durable write here

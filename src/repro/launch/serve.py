@@ -79,6 +79,22 @@ def main():
                              "default"),
                     help="QoS class to register --tenant under "
                          "(default: the registry's permissive default)")
+    ap.add_argument("--joint", action="store_true",
+                    help="whole-model joint planning: ONE submit_joint "
+                         "covers every banked memory this architecture "
+                         "serves through (kv_pool + moe_dispatch / "
+                         "ssm_state), co-selected under a shared "
+                         "resource budget; the server promotes ALL "
+                         "pools to the joint layouts atomically "
+                         "between decode ticks")
+    ap.add_argument("--budget-bram", type=int, default=None,
+                    help="joint budget: cap the summed BRAM draw "
+                         "across the model's memories")
+    ap.add_argument("--budget-luts", type=float, default=None,
+                    help="joint budget: cap the summed LUT draw")
+    ap.add_argument("--budget-banks", type=int, default=None,
+                    help="joint budget: cap total physical banks "
+                         "(duplicates included)")
     ap.add_argument("--stats-interval", type=float, default=0.0,
                     help="print the service's stats counters (observations/"
                          "refreshes/demotions included, per-tenant slices "
@@ -93,7 +109,7 @@ def main():
     from ..core.service import PlanService
     from ..core.store import DirectoryStore
     from ..models import get_model
-    from ..runtime.server import Request, Server, page_ticket
+    from ..runtime.server import Request, Server, joint_ticket, page_ticket
 
     # plan store + fabric first: sweeping stale-version entries, binding
     # the worker listener, and building the service all overlap the
@@ -164,14 +180,33 @@ def main():
     # submit -> ticket: model build and solver overlap; the server's first
     # tick runs from the fallback artifact if the solve hasn't landed
     t_submit = time.perf_counter()
-    ticket = page_ticket(cfg, max_len=args.max_len,
-                         page=min(16, args.max_len // 4),
-                         readers=args.max_batch, service=service,
-                         scorer="measured" if args.telemetry else None,
-                         tenant=args.tenant)
-    print(f"submitted KV-pool plan in "
-          f"{(time.perf_counter() - t_submit) * 1e3:.2f} ms "
-          f"(ticket: {ticket.status})")
+    if args.joint:
+        from ..core.jointplan import ResourceBudget
+        budget = None
+        if (args.budget_bram is not None or args.budget_luts is not None
+                or args.budget_banks is not None):
+            budget = ResourceBudget(bram=args.budget_bram,
+                                    lut=args.budget_luts,
+                                    banks=args.budget_banks)
+        ticket = joint_ticket(cfg, max_len=args.max_len,
+                              page=min(16, args.max_len // 4),
+                              readers=args.max_batch, service=service,
+                              budget=budget,
+                              scorer="measured" if args.telemetry else None,
+                              tenant=args.tenant)
+        print(f"submitted joint plan ({len(ticket.members) or 'cached'} "
+              f"memories) in "
+              f"{(time.perf_counter() - t_submit) * 1e3:.2f} ms "
+              f"(ticket: {ticket.status})")
+    else:
+        ticket = page_ticket(cfg, max_len=args.max_len,
+                             page=min(16, args.max_len // 4),
+                             readers=args.max_batch, service=service,
+                             scorer="measured" if args.telemetry else None,
+                             tenant=args.tenant)
+        print(f"submitted KV-pool plan in "
+              f"{(time.perf_counter() - t_submit) * 1e3:.2f} ms "
+              f"(ticket: {ticket.status})")
     server = Server(model, max_batch=args.max_batch, max_len=args.max_len,
                     kv_plan=ticket)
     print("serving from:", server.pager.artifact.describe())
@@ -194,6 +229,17 @@ def main():
     if server.swaps:
         print(f"hot-swapped to solved layout after tick <= {server.ticks}: "
               f"{server.pager.artifact.describe()}")
+    if args.joint:
+        if server.joint_promotions or server.joint_swaps:
+            print(f"joint: {server.joint_promotions} coherent all-pool "
+                  f"promotions, {server.joint_swaps} final swaps "
+                  f"(generations {server.generations}, "
+                  f"coherent={server.coherent})")
+        if ticket.done():
+            jp = ticket.result()
+            print(f"joint selection: fits={jp.fits()} "
+                  f"feasible={jp.feasible} "
+                  f"total={jp.total_use.as_dict()}")
     print(f"served {args.requests} requests ({total_tokens} tokens) in "
           f"{server.ticks} ticks, {dt:.1f}s "
           f"({total_tokens/dt:.1f} tok/s on this host)")

@@ -43,7 +43,9 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core.artifact import CompiledBankingPlan
 from ..core.controller import AccessDecl, Counter, Ctrl, Program, Sched
-from ..core.service import PlanService, PlanTicket, default_service
+from ..core.jointplan import ResourceBudget
+from ..core.service import (JointTicket, PlanService, PlanTicket,
+                            default_service)
 from ..core.polytope import Affine, MemorySpec
 from ..models import Model
 from ..launch import steps as steps_mod
@@ -67,6 +69,82 @@ def _page_program(max_len: int, page: int, readers: int) -> Program:
                   accesses=[AccessDecl("kv_pool", (Affine.of(r=page, j=1),))]),
         memories={"kv_pool": mem},
     )
+
+
+def model_memory_program(cfg: ArchConfig, max_len: int, page: int = 128,
+                         readers: int = 8) -> Program:
+    """One whole-model ``Program``: every banked memory the serving loop
+    touches for this architecture, as children of one root controller.
+
+    * ``kv_pool`` -- the paged KV cache every family reads per decode
+      tick (``readers`` parallel lanes, ``page``-token pages);
+    * ``moe_dispatch`` (MoE families) -- the per-expert token staging
+      buffer the router scatters into, ``top_k`` experts in parallel;
+    * ``ssm_state`` (SSM families) -- the chunked state the scan
+      updates, four head lanes in parallel.
+
+    This is what turns each config in ``configs/`` into a distinct
+    joint-planning workload: one ``submit_joint`` co-selects schemes
+    for all of a model's pools under a shared budget.
+    """
+    mems: Dict[str, MemorySpec] = {
+        "kv_pool": MemorySpec("kv_pool", dims=(max_len,), word_bits=16,
+                              ports=1)}
+    kids = [Ctrl("decode", Sched.INNER,
+                 counters=[Counter("r", 0, 1, readers, par=readers),
+                           Counter("j", 0, 1, page)],
+                 accesses=[AccessDecl("kv_pool",
+                                      (Affine.of(r=page, j=1),))])]
+    if cfg.n_experts > 0:
+        slot = max(4, page // 4)
+        mems["moe_dispatch"] = MemorySpec(
+            "moe_dispatch", dims=(cfg.n_experts * slot,), word_bits=16,
+            ports=1)
+        par = max(1, cfg.top_k)
+        kids.append(Ctrl(
+            "route", Sched.INNER,
+            counters=[Counter("e", 0, 1, par, par=par),
+                      Counter("j", 0, 1, slot)],
+            accesses=[AccessDecl("moe_dispatch",
+                                 (Affine.of(e=slot, j=1),))]))
+    if cfg.ssm_state > 0:
+        lanes = 4
+        mems["ssm_state"] = MemorySpec(
+            "ssm_state", dims=(lanes * cfg.ssm_state,), word_bits=16,
+            ports=1)
+        kids.append(Ctrl(
+            "scan", Sched.INNER,
+            counters=[Counter("h", 0, 1, lanes, par=lanes),
+                      Counter("j", 0, 1, cfg.ssm_state)],
+            accesses=[AccessDecl("ssm_state",
+                                 (Affine.of(h=cfg.ssm_state, j=1),))]))
+    if len(kids) == 1:
+        return Program(root=kids[0], memories=mems)
+    return Program(root=Ctrl("model", Sched.FORKJOIN, children=kids),
+                   memories=mems)
+
+
+def joint_ticket(cfg: ArchConfig, max_len: int, page: int = 128,
+                 readers: int = 8, *,
+                 service: Optional[PlanService] = None,
+                 budget: Optional[ResourceBudget] = None,
+                 scorer=None, tenant: Optional[str] = None) -> JointTicket:
+    """Submit the whole model's banking problems as ONE joint request;
+    returns the :class:`~repro.core.service.JointTicket` immediately.
+
+    The server starts on ``ticket.fallback()`` for every pool and
+    promotes all of them to the jointly co-selected layouts atomically
+    between decode ticks -- never a mixed generation.  ``budget`` caps
+    the summed draw (banks / volume / LUT / FF / BRAM / DSP) across all
+    of the model's memories.
+    """
+    from ..core.solver import SolverOptions
+    svc = service if service is not None else default_service()
+    return svc.submit_joint(
+        model_memory_program(cfg, max_len, page=page, readers=readers),
+        budget=budget,
+        opts=SolverOptions(b_candidates=(page, 1), allow_multidim=False),
+        scorer=scorer, tenant=tenant)
 
 
 def page_ticket(cfg: ArchConfig, max_len: int, page: int = 128,
@@ -165,16 +243,22 @@ class KVPagePool:
 class Server:
     """Continuous-batching decode server.
 
-    ``kv_plan`` may be a solved ``CompiledBankingPlan`` (legacy) or a
-    ``PlanTicket``: with a ticket the server builds its page pool and
-    token-record table from ``ticket.fallback()`` -- serving its first
-    tick without waiting on the solver -- and atomically swaps in the
-    solved artifact between ticks once ``ticket.done()``.
+    ``kv_plan`` may be a solved ``CompiledBankingPlan`` (legacy), a
+    ``PlanTicket``, or a ``JointTicket``: with a ticket the server
+    builds its page pool and token-record table from the ticket's
+    fallback -- serving its first tick without waiting on the solver --
+    and atomically swaps in the solved artifact between ticks once the
+    ticket resolves.  A joint ticket brings the whole model's pools
+    (``kv_pool`` plus e.g. ``moe_dispatch`` / ``ssm_state``): ALL of
+    them promote to the jointly co-selected layouts in one coherent
+    generation between decode ticks, never a mixed one
+    (``server.generations`` stays uniform by construction; asserted by
+    ``coherent``).
     """
 
     def __init__(self, model: Model, max_batch: int = 4, max_len: int = 128,
                  kv_plan: Optional[Union[CompiledBankingPlan,
-                                         PlanTicket]] = None):
+                                         PlanTicket, JointTicket]] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_batch = max_batch
@@ -186,15 +270,37 @@ class Server:
         self.cache = model.init_cache(max_batch, max_len)
         self._kv_ticket: Optional[PlanTicket] = None
         self._kv_art: Optional[CompiledBankingPlan] = None
+        # the joint ticket graph and its satellite pools (every model
+        # memory except kv_pool, which owns the record table below)
+        self._joint: Optional[JointTicket] = None
+        self.pools: Dict[str, KVPagePool] = {}
+        self.generations: Dict[str, int] = {}
+        self._joint_version = 0
+        self._joint_adopted_final = False
         # demotion hot-swap: remember which service answered the KV plan
         # (and under which key) so _maybe_swap_kv can poll its telemetry
         # hub for a replacement ticket after the served plan is demoted
         self._kv_service = (kv_plan._service
-                            if isinstance(kv_plan, PlanTicket) else None)
+                            if isinstance(kv_plan, (PlanTicket, JointTicket))
+                            else None)
         self._kv_key = ((kv_plan.signature, kv_plan.scorer_name)
                         if isinstance(kv_plan, PlanTicket) else None)
         art: Optional[CompiledBankingPlan] = None
-        if isinstance(kv_plan, PlanTicket):
+        if isinstance(kv_plan, JointTicket):
+            self._joint = kv_plan
+            arts = (kv_plan.artifacts() if kv_plan.done()
+                    else kv_plan.fallback())
+            if "kv_pool" not in arts:
+                raise ValueError(
+                    "joint ticket has no 'kv_pool' member; build the "
+                    "program with model_memory_program()")
+            art = arts["kv_pool"]
+            for name, a in arts.items():
+                if name != "kv_pool":
+                    self.pools[name] = KVPagePool(a, slots=max_batch)
+            self.generations = {name: 0 for name in arts}
+            self._joint_adopted_final = kv_plan.done()
+        elif isinstance(kv_plan, PlanTicket):
             # serve NOW: solved artifact when already done, else fallback.
             # Only drop the ticket once its solved artifact was actually
             # adopted -- a solve landing (or failing) between these calls
@@ -219,6 +325,8 @@ class Server:
             self._adopt_kv_artifact(art, records=None)
         self.swaps = 0
         self.promotions = 0       # best-so-far adoptions before the solve
+        self.joint_swaps = 0      # coherent all-pool swaps (final plan)
+        self.joint_promotions = 0  # coherent all-pool best-so-far adoptions
         self._kv_best_version = 0
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.positions = np.zeros(max_batch, np.int64)  # next record slot
@@ -342,6 +450,70 @@ class Server:
         self._swap_to(art)
         self.promotions += 1
 
+    # -- coherent multi-pool swap ---------------------------------------------
+    @property
+    def coherent(self) -> bool:
+        """True iff every pool serves the same joint generation -- the
+        invariant the atomic all-pool swap maintains: a decode tick
+        never sees a mixed generation."""
+        return len(set(self.generations.values())) <= 1
+
+    def _swap_all(self, arts: Dict[str, CompiledBankingPlan]) -> int:
+        """Adopt a whole joint selection atomically between ticks: the
+        KV record table repacks, every satellite pool re-pages, and ALL
+        pool generations advance to one new value in the same swap --
+        no tick ever reads pools from two generations.  Returns how
+        many pools actually changed layout."""
+        changed = 0
+        kv = arts.get("kv_pool")
+        if kv is not None and self._kv_art is not None \
+                and kv.layout != self._kv_art.layout:
+            self._swap_to(kv)
+            changed += 1
+        for name, pool in self.pools.items():
+            a = arts.get(name)
+            if a is not None and a.layout != pool.artifact.layout:
+                pool.swap(a)
+                changed += 1
+        gen = max(self.generations.values(), default=0) + 1
+        for name in self.generations:
+            self.generations[name] = gen
+        return changed
+
+    def _maybe_swap_joint(self) -> None:
+        """Between ticks: promote ALL pools toward the joint selection.
+
+        While member solves stream, the joint ticket re-co-selects
+        progressively; whenever the *joint* selection changes (its
+        ``best_version`` bumps) every pool adopts its newly selected
+        layout in one coherent swap.  Once the ticket resolves, the
+        final certified selection lands the same way -- never a mixed
+        generation."""
+        jt = self._joint
+        if jt is None:
+            return
+        if jt.done():
+            if self._joint_adopted_final:
+                return
+            self._joint_adopted_final = True
+            try:
+                arts = jt.artifacts()
+            except Exception:
+                return   # selection failed: keep serving current layouts
+            if self._swap_all(arts):
+                self.joint_swaps += 1
+            return
+        version = jt.best_version()
+        if version == self._joint_version:
+            return
+        self._joint_version = version
+        try:
+            arts = jt.artifacts()
+        except Exception:
+            return
+        if self._swap_all(arts):
+            self.joint_promotions += 1
+
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
@@ -396,7 +568,10 @@ class Server:
                         time.perf_counter() - t0)
 
     def _tick(self):
-        self._maybe_swap_kv()
+        if self._joint is not None:
+            self._maybe_swap_joint()
+        else:
+            self._maybe_swap_kv()
         self._admit()
         if not self.active:
             return
