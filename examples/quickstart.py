@@ -81,6 +81,17 @@ cheapest memory down so the whole model fits.  A server built on the
 joint ticket promotes ALL its pools atomically between decode ticks
 (``launch/serve.py --joint --budget-bram N``).
 
+And the whole plane is **observable**: ``service.enable_tracing()``
+gives every ticket a trace_id with hierarchical spans across
+submit -> admission -> queue -> solve -> certify (remote fabric worker
+spans stitch into the same trace over the wire), a bounded flight
+recorder dumps Chrome-trace JSON on demand or on anomaly (latency SLO,
+cert rejection, demotion), and a ``MetricsRegistry`` mirrors every
+stats counter behind Prometheus-text ``/metrics`` served by a stdlib
+HTTP thread (``launch/serve.py --trace-dir DIR --metrics-port P``).
+The last section below enables the tracer, runs a cold solve, dumps
+the Chrome trace, and scrapes ``/metrics``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -343,6 +354,47 @@ def main():
           f"co-selected {squeezed.total_use.bram} "
           f"(fits={squeezed.fits()}, independent would not)")
     jsvc.shutdown()
+
+    # OBSERVE: every submit gets a trace_id once tracing is enabled --
+    # hierarchical spans cover prepare -> queue-wait -> shard-eval ->
+    # reduce (and, on a fabric, the REMOTE workers' lease/eval spans
+    # stitch into the same trace over the wire).  The flight recorder
+    # keeps the last N completed ticket traces and dumps Chrome
+    # trace_event JSON for chrome://tracing / Perfetto; the metrics
+    # registry mirrors every ServiceStats counter as
+    # plan_<counter>{tenant=...} plus queue/latency histograms, served
+    # as Prometheus text from a stdlib HTTP thread.
+    import json as json_mod
+    import tempfile
+    import urllib.request
+
+    from repro.core import start_observability_server
+    osvc = PlanService(workers=2)
+    osvc.enable_tracing(slo_ms=5_000.0)
+    om = MemorySpec("obs", dims=(384,), word_bits=32, ports=1)
+    oprog = Program(
+        root=Ctrl("reader", Sched.INNER,
+                  counters=[Counter("i", 0, 1, 32, par=8)],
+                  accesses=[AccessDecl("obs", (Affine.of(i=1),))]),
+        memories={"obs": om})
+    oticket = osvc.submit(oprog, "obs", use_cache=False)
+    oticket.result(timeout=120)
+    trace = osvc.recorder.traces()[-1]
+    stages = {s.name: round(s.duration_ms, 2) for s in trace.spans}
+    with tempfile.TemporaryDirectory() as tmp:
+        path = osvc.recorder.dump(f"{tmp}/trace.json")
+        n_events = len(json_mod.load(open(path))["traceEvents"])
+    http = start_observability_server(osvc.metrics, osvc.recorder,
+                                      tracer=osvc.tracer, port=0)
+    host, port = http.server_address[:2]
+    prom = urllib.request.urlopen(
+        f"http://{host}:{port}/metrics", timeout=10).read().decode()
+    print(f"observe  : ticket {oticket.trace_id} spanned {stages}; "
+          f"Chrome dump had {n_events} events; /metrics served "
+          f"{len(prom.splitlines())} series (queue_ms="
+          f"{oticket.as_dict()['queue_ms']:.2f})")
+    http.shutdown()
+    osvc.shutdown()
 
 
 if __name__ == "__main__":

@@ -86,6 +86,16 @@ from .service import (
 )
 from .solver import BankingSolution, SolverOptions, solve, solve_monolithic
 from .store import DirectoryStore, MemoryStore, PlanStore
+from .tracing import (
+    FlightRecorder,
+    MetricsRegistry,
+    Span,
+    TicketTrace,
+    Tracer,
+    chrome_trace_events,
+    new_trace_id,
+    start_observability_server,
+)
 from .telemetry import (
     MeasuredCost,
     MeasuredScorer,
@@ -103,26 +113,30 @@ __all__ = [
     "BankingLayout",
     "BankingPlan", "BankingPlanner", "BankingSolution", "Candidate",
     "CandidateSpace", "CompiledBankingPlan", "Counter", "Ctrl", "CutGate",
-    "DirectoryStore", "FlatGeometry", "FrontierPoint", "Iterator",
+    "DirectoryStore", "FlatGeometry", "FlightRecorder", "FrontierPoint",
+    "Iterator",
     "JointMember", "JointPlan", "JointRequest", "JointSelection",
     "JointTicket", "MeasuredCost",
-    "MeasuredScorer", "MemorySpec", "MemoryStore", "MultiDimGeometry",
+    "MeasuredScorer", "MemorySpec", "MemoryStore", "MetricsRegistry",
+    "MultiDimGeometry",
     "PlanRequest", "PlanService", "PlanStore", "PlanTicket",
     "PreparedRequest", "Program", "QOS_CLASSES", "QoSClass",
     "ResourceBudget", "ResourceUse", "Sched",
     "ServiceTelemetry",
     "SolutionReducer", "SolveFabric", "SolveShard", "SolverOptions",
-    "StaleWhileRevalidate", "TelemetryConfig", "TelemetryLog",
-    "TenantRegistry", "Unroll",
-    "as_compiled", "build_groups", "canonical_signature", "co_select",
+    "Span", "StaleWhileRevalidate", "TelemetryConfig", "TelemetryLog",
+    "TenantRegistry", "TicketTrace", "Tracer", "Unroll",
+    "as_compiled", "build_groups", "canonical_signature",
+    "chrome_trace_events", "co_select",
     "compile_geometry", "compile_plan", "compile_solution",
     "compile_trivial", "default_planner", "default_service",
     "default_telemetry_log", "evaluate", "evaluate_parallel",
     "family_signature", "joint_signature", "lane_compile",
-    "pareto_frontier", "program_signature",
+    "new_trace_id", "pareto_frontier", "program_signature",
     "rank_solutions", "register_scorer", "registered_scorers",
     "resolve_scorer", "roofline_prior_seconds", "scheme_hash",
     "set_ml_scorer_path", "shard_from_indices", "solve",
     "solve_monolithic", "solve_space", "space_from_wire", "space_to_wire",
-    "spawn_local_workers", "trivial_solution", "unroll",
+    "spawn_local_workers", "start_observability_server",
+    "trivial_solution", "unroll",
 ]

@@ -164,6 +164,9 @@ class _Lease:
     solve: "_FabricSolve"
     worker_id: int
     issued_at: float
+    # perf_counter twin of issued_at: trace spans live on the
+    # perf_counter clock, and worker-side spans rebase onto this
+    issued_pc: float = 0.0
 
 
 class _Worker:
@@ -186,12 +189,13 @@ class _Worker:
 class _FabricSolve:
     def __init__(self, solve_id: int, space: CandidateSpace,
                  reducer: SolutionReducer, verifier=None,
-                 lease_cap: Optional[int] = None):
+                 lease_cap: Optional[int] = None, trace=None):
         self.solve_id = solve_id
         self.space = space
         self.reducer = reducer
         self.verifier = verifier          # untrusted-result gate (or None)
         self.lease_cap = lease_cap        # max concurrent leases (QoS)
+        self.trace = trace                # (Tracer, trace_id) or None
         self.payload = space_to_wire(space)
         self.pending: deque = deque()
         self.outstanding: Dict[int, _Lease] = {}
@@ -392,6 +396,13 @@ class SolveFabric:
                         self._requeue(live)
                         self._pump()
                         self._cond.notify_all()
+                if solve.trace is not None:
+                    tr, tid = solve.trace
+                    tr.instant(tid, "cert-reject",
+                               worker=worker.wid,
+                               lease_id=lease.lease_id)
+                    tr.note_anomaly("cert-rejection",
+                                    detail=f"worker-{worker.wid}")
                 return
         for ev in events:
             solve.reducer.add(ev)
@@ -416,6 +427,10 @@ class SolveFabric:
                     targets.append(w)
             solve.report.cut_broadcasts += 1
             self.stats.cut_broadcasts += 1
+        if solve.trace is not None:
+            tr, tid = solve.trace
+            tr.instant(tid, "cut-broadcast", workers=len(targets),
+                       cuts=len(cuts))
         for w in targets:
             w.sendq.put({"t": "cuts", "solve_id": solve.solve_id,
                          "cuts": cuts})
@@ -433,6 +448,18 @@ class SolveFabric:
             self.stats.evaluated += n
             self._pump()
             self._cond.notify_all()
+        trace = lease.solve.trace
+        if trace is not None:
+            tr, tid = trace
+            # the driver-side lease span (issue -> done) plus whatever
+            # spans the worker measured locally, rebased onto the
+            # lease's issue time so the whole tree shares one clock
+            tr.record(tid, "lease", lease.issued_pc,
+                      time.perf_counter(), worker=lease.worker_id,
+                      lease_id=lease.lease_id, evaluated=n)
+            tr.add_remote_spans(tid, msg.get("spans"),
+                                base=lease.issued_pc,
+                                origin=f"worker-{lease.worker_id}")
 
     def _on_error(self, worker: _Worker, msg: dict) -> None:
         with self._cond:
@@ -481,6 +508,11 @@ class SolveFabric:
         solve.pending.appendleft(unit)
         solve.report.requeues += 1
         self.stats.requeues += 1
+        if solve.trace is not None:
+            tr, tid = solve.trace
+            tr.instant(tid, "requeue", worker=lease.worker_id,
+                       lease_id=lease.lease_id,
+                       units=len(unit.indices))
 
     # -- scheduling -----------------------------------------------------------
     def _cut_filter(self, solve: _FabricSolve,
@@ -536,7 +568,8 @@ class SolveFabric:
                     continue              # whole unit beyond the cuts
                 lease = _Lease(lease_id=self._next_lease(), unit=unit,
                                solve=solve, worker_id=target.wid,
-                               issued_at=time.monotonic())
+                               issued_at=time.monotonic(),
+                               issued_pc=time.perf_counter())
                 self._leases[lease.lease_id] = lease
                 target.outstanding[lease.lease_id] = lease
                 solve.outstanding[lease.lease_id] = lease
@@ -550,12 +583,18 @@ class SolveFabric:
                     target.sendq.put({"t": "space",
                                       "solve_id": solve.solve_id,
                                       "payload": solve.payload})
-                target.sendq.put({
+                frame = {
                     "t": "lease", "solve_id": solve.solve_id,
                     "lease_id": lease.lease_id, "indices": indices,
                     "cuts": (solve.cuts_sent if self.broadcast_cuts
                              else {}),
-                })
+                }
+                if solve.trace is not None:
+                    # trace_id rides the wire; workers that predate the
+                    # key ignore it, and their done frames simply carry
+                    # no spans back
+                    frame["trace"] = solve.trace[1]
+                target.sendq.put(frame)
             still_pending.extend(solve.pending)
             solve.pending = still_pending
 
@@ -599,7 +638,8 @@ class SolveFabric:
               reducer: Optional[SolutionReducer] = None,
               scorer=None, chunk: Optional[int] = None,
               verifier=None,
-              lease_cap: Optional[int] = None) -> FabricReport:
+              lease_cap: Optional[int] = None,
+              trace=None) -> FabricReport:
         """Evaluate ``space`` across the attached workers, merging every
         stream into ``reducer`` (one is created when omitted -- read the
         merged result off ``reducer.finalize()``).  Blocks until every
@@ -618,6 +658,12 @@ class SolveFabric:
         ``lease_cap`` bounds this solve's CONCURRENT outstanding leases
         (a low-QoS tenant's solve may not occupy every worker's lease
         window while an interactive solve waits); ``None`` = unbounded.
+
+        ``trace`` is ``(tracer, trace_id)`` from the submitting
+        service: the id is stamped on every lease frame (workers echo
+        their measured spans on the done frame), and the driver records
+        serialize / lease / requeue / cut-broadcast / local-eval spans
+        under it -- the whole distributed solve stitches into ONE trace.
         """
         red = reducer if reducer is not None else SolutionReducer(
             space, scorer=scorer)
@@ -626,8 +672,14 @@ class SolveFabric:
         # encoding the space (pickle + zlib) can take a while for big
         # problems: do it before touching the fabric lock so concurrent
         # solves' result intake and dispatch never stall behind it
+        t_ser = time.perf_counter()
         solve = _FabricSolve(self._next_solve(), space, red,
-                             verifier=verifier, lease_cap=lease_cap)
+                             verifier=verifier, lease_cap=lease_cap,
+                             trace=trace)
+        if trace is not None:
+            trace[0].record(trace[1], "serialize", t_ser,
+                            time.perf_counter(),
+                            bytes=len(solve.payload), candidates=n)
         for lo in range(0, n, step):
             solve.pending.append(
                 _Unit(indices=tuple(range(lo, min(lo + step, n)))))
@@ -652,10 +704,15 @@ class SolveFabric:
                     if not idxs:
                         continue
                     local = 0
+                    t_loc = time.perf_counter()
                     for ev in evaluate(shard_from_indices(space, idxs),
                                        gate=red):
                         red.add(ev)
                         local += 1
+                    if trace is not None:
+                        trace[0].record(trace[1], "local-eval", t_loc,
+                                        time.perf_counter(),
+                                        units=len(idxs), evaluated=local)
                     with self._lock:
                         solve.report.local_evaluated += local
                         self.stats.local_evaluated += local

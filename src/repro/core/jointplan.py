@@ -293,7 +293,8 @@ class JointSelection:
 
 
 def co_select(frontiers: Dict[str, List[FrontierPoint]],
-              budget: Optional[ResourceBudget]) -> JointSelection:
+              budget: Optional[ResourceBudget],
+              stats_out: Optional[dict] = None) -> JointSelection:
     """Pick one frontier point per memory minimizing total predicted
     cost subject to ``budget`` -- exact for the kept frontier sizes.
 
@@ -305,7 +306,14 @@ def co_select(frontiers: Dict[str, List[FrontierPoint]],
     selection fits -- the budget is under even the all-trivial draw --
     the all-trivial selection is returned with ``feasible=False``:
     co-selection never raises for want of resources.
+
+    ``stats_out`` (a dict, when given) receives the search effort --
+    ``nodes`` visited and ``pruned`` (bound + admissibility cuts) -- so
+    a co-select trace span can say how hard the search worked.
     """
+    if stats_out is not None:
+        stats_out["nodes"] = 0
+        stats_out["pruned"] = 0
     names = sorted(frontiers)
     if not names:
         return JointSelection({}, ResourceUse(), 0.0, True)
@@ -321,6 +329,8 @@ def co_select(frontiers: Dict[str, List[FrontierPoint]],
         use = ResourceUse()
         for p in picks.values():
             use = use + p.use
+        if stats_out is not None:
+            stats_out["nodes"] = len(names)
         return JointSelection(picks, use,
                               sum(p.score for p in picks.values()), True)
     # admissible suffix lower bounds: min score and per-axis min use of
@@ -344,9 +354,15 @@ def co_select(frontiers: Dict[str, List[FrontierPoint]],
 
     def dfs(i: int, use: ResourceUse, score: float,
             picks: List[FrontierPoint]) -> None:
+        if stats_out is not None:
+            stats_out["nodes"] += 1
         if best[0] is not None and score + suf_score[i] >= best[0][0]:
+            if stats_out is not None:
+                stats_out["pruned"] += 1
             return
         if not admissible(use, i):
+            if stats_out is not None:
+                stats_out["pruned"] += 1
             return
         if i == n:
             best[0] = (score, list(picks))

@@ -100,6 +100,7 @@ from .jointplan import (
 from .polytope import MemorySpec
 from .solver import BankingSolution, SolverOptions
 from .store import PlanStore, as_store
+from .tracing import NULL_SPAN, new_trace_id
 
 
 @dataclass
@@ -161,6 +162,17 @@ class PlanTicket:
         self.submitted_at = time.time()
         self.resolved_at: Optional[float] = None
         self.status = "queued"
+        # observability: the per-ticket trace (None when tracing is
+        # off) and the honest latency attribution satellites --
+        # queue_ms / deferred_ms accumulate wall time the ticket spent
+        # waiting for a worker / parked by admission, measured from
+        # monotonic timestamps whether or not spans record them
+        self.trace_id: Optional[str] = None
+        self._root_span = None
+        self.queue_ms = 0.0
+        self.deferred_ms = 0.0
+        self._queued_at: Optional[float] = None
+        self._deferred_at: Optional[float] = None
         self._admitted = False       # holds one admission in-flight slot
         self._event = threading.Event()
         self._plan: Optional[BankingPlan] = None
@@ -344,6 +356,32 @@ class PlanTicket:
             except Exception:   # a consumer's bug must not kill the solve
                 pass
 
+    def as_dict(self) -> Dict[str, object]:
+        """JSON-serializable ticket summary with honest latency
+        attribution: ``queue_ms`` is time spent waiting for a worker,
+        ``deferred_ms`` time parked by admission control -- both
+        sourced from the same monotonic timestamps the trace spans
+        record, so admission latency is attributable instead of folded
+        into solve time."""
+        now = time.time()
+        resolved = self.resolved_at
+        return {
+            "memory": self.memory,
+            "signature": self.signature,
+            "scorer": self.scorer_name,
+            "status": self.status,
+            "tenant": self.tenant,
+            "priority": self.priority,
+            "deferred": self.deferred,
+            "trace_id": self.trace_id,
+            "submitted_at": self.submitted_at,
+            "resolved_at": resolved,
+            "latency_ms": round(((resolved if resolved is not None
+                                  else now) - self.submitted_at) * 1e3, 3),
+            "queue_ms": round(self.queue_ms, 3),
+            "deferred_ms": round(self.deferred_ms, 3),
+        }
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"<PlanTicket {self.memory} {self.signature[:16]}... "
                 f"{self.status}>")
@@ -384,6 +422,7 @@ class JointTicket:
         self.submitted_at = time.time()
         self.resolved_at: Optional[float] = None
         self.status = "queued"
+        self.trace_id: Optional[str] = None
         self.members: Dict[str, PlanTicket] = {}
         self._preps = preps
         self._event = threading.Event()
@@ -452,6 +491,10 @@ class JointTicket:
                 self.status = "error"
                 self.resolved_at = time.time()
                 self._event.set()
+                tr = self._service.tracer
+                if tr is not None and self.trace_id is not None:
+                    tr.finish(self.trace_id, status="error",
+                              anomaly="error")
 
     # -- frontiers -------------------------------------------------------------
     def _trivial_for(self, name: str) -> BankingSolution:
@@ -497,8 +540,15 @@ class JointTicket:
         with self._lock:
             if stamp == self._stamp and self._selection is not None:
                 return self._selection
+        tr = self._service.tracer
+        cs_stats = {} if tr is not None else None
+        t_sel = time.perf_counter()
         frontiers = {n: self._frontier_for(n) for n in self.members}
-        sel = co_select(frontiers, self.budget)
+        sel = co_select(frontiers, self.budget, stats_out=cs_stats)
+        if tr is not None and self.trace_id is not None:
+            tr.record(self.trace_id, "co-select", t_sel,
+                      time.perf_counter(), progressive=True,
+                      **(cs_stats or {}))
         with self._lock:
             if sel.key() != self._sel_key:
                 self._version += 1
@@ -601,10 +651,17 @@ class JointTicket:
         needs no certificate because it serializes instead of banking).
         """
         service = self._service
+        tr = service.tracer
+        tid = self.trace_id if tr is not None else None
         frontiers = {n: self._frontier_for(n) for n in self.members}
         certs: Dict[str, Optional[dict]] = {}
         while True:
-            sel = co_select(frontiers, self.budget)
+            cs_stats = {} if tr is not None else None
+            t_sel = time.perf_counter()
+            sel = co_select(frontiers, self.budget, stats_out=cs_stats)
+            if tid is not None:
+                tr.record(tid, "co-select", t_sel, time.perf_counter(),
+                          final=True, **(cs_stats or {}))
             if self.verify == "off":
                 break
             evicted = False
@@ -658,6 +715,9 @@ class JointTicket:
         self.status = "done"
         self.resolved_at = time.time()
         self._event.set()
+        if tid is not None:
+            tr.finish(tid, status="ok",
+                      anomaly=None if sel.feasible else "infeasible")
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"<JointTicket {self.signature[:16]}... "
@@ -704,6 +764,12 @@ class ServiceStats:
     # never has its own sub-slices)
     tenants: Dict[str, "ServiceStats"] = field(default_factory=dict,
                                                repr=False, compare=False)
+    # the MetricsRegistry mirror (enable_tracing wires it): every bump
+    # ALSO lands as plan_<name>{tenant=...} through the same single
+    # write path, so the registry subsumes this arithmetic without
+    # breaking the exact per-tenant reconciliation
+    metrics: Optional[object] = field(default=None, repr=False,
+                                      compare=False)
 
     def bump(self, name: str, n: int = 1,
              tenant: Optional[str] = None) -> None:
@@ -712,12 +778,17 @@ class ServiceStats:
         The single write path is what makes ``for_tenant`` slices
         reconcile *exactly* with the global counters: every global
         increment lands on exactly one slice (``tenant=None`` =
-        the default tenant).
+        the default tenant).  With a :class:`MetricsRegistry` attached
+        the same increment mirrors there as ``plan_<name>`` with a
+        ``tenant`` label -- one write, three consistent views.
         """
         setattr(self, name, getattr(self, name) + n)
         if self.tenants is not None:   # a slice doesn't slice further
             slice_ = self.for_tenant(tenant or DEFAULT_TENANT)
             setattr(slice_, name, getattr(slice_, name) + n)
+        if self.metrics is not None:
+            self.metrics.inc("plan_" + name, n,
+                             tenant=tenant or DEFAULT_TENANT)
 
     def for_tenant(self, name: str) -> "ServiceStats":
         """The tenant's counter slice (created on first touch)."""
@@ -885,6 +956,11 @@ class PlanService:
         self._shutdown = False
         self._lock = threading.Lock()
         self.telemetry = None   # ServiceTelemetry hub (enable_telemetry)
+        # observability plane (enable_tracing): all hooks are guarded by
+        # `tracer is None`, so an un-traced service pays one attr load
+        self.tracer = None
+        self.metrics = None
+        self.recorder = None
 
     def attach_fabric(self, fabric) -> None:
         """Attach (or replace) the remote solve fabric backing the
@@ -908,6 +984,39 @@ class PlanService:
             self.telemetry = hub
             self.planner.telemetry = hub
         return self.telemetry
+
+    def enable_tracing(self, *, capacity: int = 64,
+                       slo_ms: Optional[float] = None,
+                       trace_dir: Optional[str] = None):
+        """Turn on the observability plane (idempotent).
+
+        Builds one :class:`~repro.core.tracing.MetricsRegistry` (every
+        ``stats.bump`` mirrors into it as ``plan_<counter>`` with a
+        ``tenant`` label), one :class:`~repro.core.tracing.Tracer`
+        (each submit gets a ``trace_id`` whose spans cover
+        prepare -> lookup -> admission -> queue-wait -> solve -> certify,
+        stitched with remote fabric worker spans over the wire), and
+        one :class:`~repro.core.tracing.FlightRecorder` keeping the
+        last ``capacity`` completed ticket traces -- dumped as Chrome
+        ``trace_event`` JSON on demand or on anomaly (latency over
+        ``slo_ms``, a certificate rejection, a telemetry demotion;
+        anomaly dumps land in ``trace_dir`` when given).  Returns the
+        tracer.
+        """
+        if self.tracer is None:
+            from .tracing import FlightRecorder, MetricsRegistry, Tracer
+            self.metrics = MetricsRegistry()
+            self.recorder = FlightRecorder(capacity=capacity,
+                                           slo_ms=slo_ms,
+                                           trace_dir=trace_dir,
+                                           metrics=self.metrics)
+            self.tracer = Tracer(recorder=self.recorder,
+                                 metrics=self.metrics)
+            self.stats.metrics = self.metrics
+            # queue depth / pops and admission backlog gauges
+            self._queue.metrics = self.metrics
+            self._admission.metrics = self.metrics
+        return self.tracer
 
     # -- the front door ----------------------------------------------------------
     def submit(self, program, memory: Optional[str] = None, *,
@@ -943,12 +1052,20 @@ class PlanService:
         -- ``ticket.deferred`` -- and the fallback artifact still serves
         immediately), and its stats slice records the submit.
         """
+        tr = self.tracer
+        trace_id = new_trace_id() if tr is not None else None
+        t_prep = time.perf_counter()
         prep = self.planner.prepare(program, memory, opts=opts,
                                     scorer=scorer, use_cache=use_cache)
+        if tr is not None:
+            # the ticket doesn't exist yet: the trace does, and the
+            # prepare stage is its first span
+            tr.record(trace_id, "prepare", t_prep, time.perf_counter(),
+                      memory=prep.memory)
         return self.submit_prepared(prep, priority=priority,
                                     shard_budget=shard_budget,
                                     executor=executor, verify=verify,
-                                    tenant=tenant)
+                                    tenant=tenant, _trace_id=trace_id)
 
     def submit_request(self, request: PlanRequest, *,
                        priority: int = 0) -> PlanTicket:
@@ -960,7 +1077,8 @@ class PlanService:
                         shard_budget: Optional[int] = None,
                         executor: Optional[str] = None,
                         verify: Optional[str] = None,
-                        tenant: Optional[str] = None) -> PlanTicket:
+                        tenant: Optional[str] = None,
+                        _trace_id: Optional[str] = None) -> PlanTicket:
         if executor is not None and executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; one of {EXECUTORS}")
@@ -972,27 +1090,47 @@ class PlanService:
         # the QoS band offsets the caller's priority: an interactive
         # tenant's priority-0 submit still outranks a batch tenant's
         priority = priority + ten.qos.priority
+        tr = self.tracer
+        trace_id = (_trace_id if _trace_id is not None
+                    else (new_trace_id() if tr is not None else None))
         self.stats.bump("submits", tenant=ten.name)
         if verify != "off":
             # lint before anything queues: problems no banking can fix
             # (OOB accesses, colliding Syms, oversubscribed ports) must
             # fail the submit, not burn a solve
-            self._lint_gate(prep, ten.name)
+            with (tr.span(trace_id, "lint") if tr is not None
+                  else NULL_SPAN):
+                self._lint_gate(prep, ten.name)
         key = (prep.signature, prep.scorer_name)
         if prep.request.use_cache:
+            t_look = time.perf_counter()
             hit = self.planner.lookup(prep)
+            if tr is not None:
+                tr.record(trace_id, "lookup", t_look, time.perf_counter(),
+                          hit=hit is not None)
             if hit is not None:
                 self.stats.bump("sync_hits", tenant=ten.name)
                 ticket = PlanTicket(service=self, prep=prep,
                                     priority=priority, verify=verify,
                                     tenant=ten.name)
+                ticket.trace_id = trace_id
                 ticket._resolve(hit)
+                if tr is not None:
+                    tr.finish(trace_id, status="sync-hit",
+                              label=f"ticket {prep.memory}")
                 if self.telemetry is not None:
                     self.telemetry.register(prep, hit)
                 return ticket
         ticket = PlanTicket(service=self, prep=prep, priority=priority,
                             shard_budget=shard_budget, executor=executor,
                             verify=verify, tenant=ten.name)
+        ticket.trace_id = trace_id
+        if tr is not None:
+            tr.label(trace_id, f"ticket {prep.memory}")
+            ticket._root_span = tr.begin(trace_id, "ticket",
+                                         memory=prep.memory,
+                                         tenant=ten.name,
+                                         signature=prep.signature[:16])
         if prep.request.use_cache:
             # atomic check-and-register: concurrent submits of the same
             # (signature, scorer) must share ONE solve
@@ -1002,6 +1140,12 @@ class PlanService:
                     self._inflight[key] = ticket
             if inflight is not None:
                 self.stats.bump("deduped", tenant=ten.name)
+                if tr is not None:
+                    # this submit rides the in-flight ticket's solve;
+                    # close the newborn trace rather than leak it live
+                    tr.end(ticket._root_span,
+                           deduped_onto=inflight.trace_id or "")
+                    tr.finish(trace_id, status="deduped")
                 if priority < inflight.priority:
                     # urgency upgrade; a still-deferred ticket isn't in
                     # the queue yet -- it just keeps the better priority
@@ -1025,9 +1169,13 @@ class PlanService:
             ticket._admitted = True
         elif self._admission.defer(ten.name, (prep, ticket)):
             ticket.deferred = True
+            ticket._deferred_at = time.perf_counter()
             if ticket.status == "queued":
                 ticket.status = "deferred"
             self.stats.bump("deferred", tenant=ten.name)
+            if tr is not None:
+                tr.instant(trace_id, "admission-deferred",
+                           tenant=ten.name)
             return ticket
         else:
             self.stats.bump("shed", tenant=ten.name)
@@ -1040,8 +1188,14 @@ class PlanService:
                 f"max_deferred={ten.qos.max_deferred}): submit shed; "
                 f"the ticket's fallback artifact is still servable"))
             ticket.status = "shed"
+            if tr is not None:
+                if ticket._root_span is not None:
+                    tr.end(ticket._root_span)
+                    ticket._root_span = None
+                tr.finish(trace_id, status="shed", anomaly="shed")
             return ticket
         self.stats.bump("queued", tenant=ten.name)
+        ticket._queued_at = time.perf_counter()
         self._enqueue((priority, next(self._seq), prep, ticket))
         self._ensure_workers()
         return ticket
@@ -1089,8 +1243,11 @@ class PlanService:
             raise ValueError(
                 f"unknown verify mode {verify!r}; one of {VERIFY_MODES}")
         ten = self.tenants.resolve(tenant)
+        tr = self.tracer
+        trace_id = new_trace_id() if tr is not None else None
         # member prep is the same cheap inline half as submit(): bad
         # memories and unknown scorers raise here, on the caller
+        t_prep = time.perf_counter()
         preps = {name: self.planner.prepare(req.program, name,
                                             opts=req.opts, scorer=req.scorer,
                                             use_cache=req.use_cache)
@@ -1099,15 +1256,22 @@ class PlanService:
         signature = joint_signature(
             {n: p.signature for n, p in preps.items()}, scorer_name,
             req.budget)
+        if tr is not None:
+            tr.label(trace_id, f"joint {len(names)} memories")
+            tr.record(trace_id, "joint-prepare", t_prep,
+                      time.perf_counter(), members=len(names))
         self.stats.bump("joint_submits", tenant=ten.name)
         ticket = JointTicket(service=self, request=req, preps=preps,
                              signature=signature, scorer_name=scorer_name,
                              verify=verify, tenant=ten.name)
+        ticket.trace_id = trace_id
         if req.use_cache and self.planner.store is not None:
             cached = self.planner.store.get_joint(signature)
             if cached is not None:
                 self.stats.bump("joint_sync_hits", tenant=ten.name)
                 ticket._resolve_cached(cached)
+                if tr is not None:
+                    tr.finish(trace_id, status="sync-hit")
                 return ticket
         # fan out the member solves -- one tenant unit; registration
         # completes before arming so a flurry of sync hits cannot
@@ -1146,7 +1310,8 @@ class PlanService:
                 self.stats.bump("lint_errors", tenant=tenant)
             raise LintError(report)
 
-    def _make_verifier(self, mode: str, tenant: str = DEFAULT_TENANT):
+    def _make_verifier(self, mode: str, tenant: str = DEFAULT_TENANT,
+                       trace_id: Optional[str] = None):
         """The certify-before-cache callback handed to
         ``BankingPlanner.complete_solve`` (``None`` when verification is
         off).  Failed certification bumps ``cert_failures`` and raises
@@ -1159,11 +1324,19 @@ class PlanService:
 
         def verify(plan: BankingPlan, prep: PreparedRequest) -> None:
             from ..analysis.certify import CertificationError, certify_plan
+            tr = self.tracer
+            t_cert = time.perf_counter()
             res = certify_plan(plan, prep.iterators,
                                scorer=prep.scorer_name)
+            if tr is not None and trace_id is not None:
+                tr.record(trace_id, "certify", t_cert,
+                          time.perf_counter(), ok=res.ok)
             if not res.ok:
                 with self._lock:
                     self.stats.bump("cert_failures", tenant=tenant)
+                if tr is not None:
+                    tr.note_anomaly("cert-rejection",
+                                    detail=plan.signature[:16])
                 why = (res.counterexample.describe()
                        if res.counterexample is not None else res.reason)
                 raise CertificationError(
@@ -1213,6 +1386,15 @@ class PlanService:
                     continue
                 if not ticket._claim():
                     continue   # duplicate entry (priority upgrade) or done
+                queued_at = ticket._queued_at
+                if queued_at is not None:
+                    now = time.perf_counter()
+                    ticket.queue_ms += (now - queued_at) * 1e3
+                    ticket._queued_at = None
+                    tr = self.tracer
+                    if tr is not None and ticket.trace_id is not None:
+                        tr.record(ticket.trace_id, "queue-wait",
+                                  queued_at, now, tenant=ticket.tenant)
                 try:
                     plan = (self.planner.lookup(payload)
                             if payload.request.use_cache else None)
@@ -1240,7 +1422,13 @@ class PlanService:
         training) stays off the submitter's thread, exactly like the
         old monolithic solve."""
         self.planner.stats.misses += 1
+        tr = self.tracer
+        tid = ticket.trace_id if tr is not None else None
+        t_enum = time.perf_counter()
         space = self.planner.build_space(prep)
+        if tid is not None:
+            tr.record(tid, "enumerate", t_enum, time.perf_counter(),
+                      candidates=len(space))
         _, scorer_fn = resolve_scorer(prep.scorer_spec)
         if self.telemetry is not None:
             # a "measured" scorer ranks on THIS service's observation log
@@ -1278,7 +1466,8 @@ class PlanService:
         if not shards:   # empty candidate space: resolve immediately
             self._finish(ticket, prep, plan=self.planner.complete_solve(
                 prep, [], 0.0, scorer_fn,
-                verify=self._make_verifier(ticket.verify, ticket.tenant)))
+                verify=self._make_verifier(ticket.verify, ticket.tenant,
+                                           trace_id=tid)))
             return
         with self._lock:
             self.stats.bump("shards_spawned", len(shards),
@@ -1305,13 +1494,29 @@ class PlanService:
             from ..analysis.certify import make_batch_verifier
             verifier = make_batch_verifier(space)
         lease_cap = self.tenants.resolve(ticket.tenant).qos.fabric_lease_cap
+        tr = self.tracer
+        tid = ticket.trace_id if tr is not None else None
         try:
+            t_fab = time.perf_counter()
             report = fabric.solve(space, reducer=reducer,
-                                  verifier=verifier, lease_cap=lease_cap)
+                                  verifier=verifier, lease_cap=lease_cap,
+                                  trace=((tr, tid) if tid is not None
+                                         else None))
+            t_red = time.perf_counter()
+            if tid is not None:
+                tr.record(tid, "fabric-solve", t_fab, t_red,
+                          leases=report.leases,
+                          requeues=report.requeues,
+                          workers_lost=report.workers_lost)
             plan = self.planner.complete_solve(
                 prep, reducer.finalize(),
                 time.perf_counter() - started, scorer_fn,
-                verify=self._make_verifier(ticket.verify, ticket.tenant))
+                verify=self._make_verifier(ticket.verify, ticket.tenant,
+                                           trace_id=tid))
+            if tid is not None:
+                tr.record(tid, "reduce", t_red, time.perf_counter(),
+                          promotions=reducer.promotions,
+                          dedup_hits=reducer.dedup_hits)
             with self._lock:
                 t = ticket.tenant
                 self.stats.bump("fabric_leases", report.leases, tenant=t)
@@ -1335,6 +1540,9 @@ class PlanService:
 
     def _run_shard(self, job: _ShardJob, ticket: PlanTicket) -> None:
         state = job.state
+        tr = self.tracer
+        tid = ticket.trace_id if tr is not None else None
+        t_eval = time.perf_counter()
         try:
             for ev in evaluate(job.shard, gate=state.reducer):
                 state.reducer.add(ev)
@@ -1343,16 +1551,25 @@ class PlanService:
                 self._finish(ticket, state.prep, error=e)
             return
         finally:
+            if tid is not None:
+                tr.record(tid, "shard-eval", t_eval, time.perf_counter(),
+                          units=len(job.shard))
             with self._lock:
                 self.stats.bump("shards_completed", tenant=ticket.tenant)
         if state.shard_finished():
             try:
                 red = state.reducer
+                t_red = time.perf_counter()
                 plan = self.planner.complete_solve(
                     state.prep, red.finalize(),
                     time.perf_counter() - state.started, state.scorer_fn,
                     verify=self._make_verifier(state.ticket.verify,
-                                               state.ticket.tenant))
+                                               state.ticket.tenant,
+                                               trace_id=tid))
+                if tid is not None:
+                    tr.record(tid, "reduce", t_red, time.perf_counter(),
+                              promotions=red.promotions,
+                              dedup_hits=red.dedup_hits)
                 with self._lock:
                     self.stats.bump("best_promotions", red.promotions,
                                     tenant=ticket.tenant)
@@ -1366,6 +1583,15 @@ class PlanService:
     def _finish(self, ticket: PlanTicket, prep: PreparedRequest, *,
                 plan: Optional[BankingPlan] = None,
                 error: Optional[BaseException] = None) -> None:
+        tr = self.tracer
+        if tr is not None and ticket.trace_id is not None:
+            if ticket._root_span is not None:
+                tr.end(ticket._root_span,
+                       status="error" if error is not None else "done")
+                ticket._root_span = None
+            tr.finish(ticket.trace_id,
+                      status="error" if error is not None else "ok",
+                      anomaly="error" if error is not None else None)
         if error is not None:
             with self._lock:
                 self.stats.bump("errors", tenant=ticket.tenant)
@@ -1390,11 +1616,21 @@ class PlanService:
         """Free the finished solve's in-flight slot and queue whatever
         the tenant's deferral backlog can now admit (oldest first, at
         each deferred ticket's kept priority)."""
+        tr = self.tracer
         for prep2, t2 in self._admission.release(tenant):
             t2.deferred = False
             t2._admitted = True
             if t2.status == "deferred":
                 t2.status = "queued"
+            deferred_at = t2._deferred_at
+            now = time.perf_counter()
+            if deferred_at is not None:
+                t2.deferred_ms += (now - deferred_at) * 1e3
+                t2._deferred_at = None
+                if tr is not None and t2.trace_id is not None:
+                    tr.record(t2.trace_id, "deferred-wait", deferred_at,
+                              now, tenant=t2.tenant)
+            t2._queued_at = now
             self.stats.bump("queued", tenant=t2.tenant)
             self._enqueue((t2.priority, next(self._seq), prep2, t2))
             try:

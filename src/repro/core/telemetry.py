@@ -617,6 +617,9 @@ class ServiceTelemetry:
         if svc is not None:
             with svc._lock:
                 svc.stats.bump("observations")
+            metrics = svc.metrics
+            if metrics is not None:
+                metrics.observe(f"observed_{op}_us", seconds * 1e6)
         if do_flush:
             self.flush()
         if do_refresh:
@@ -738,6 +741,11 @@ class ServiceTelemetry:
         if svc is not None:
             with svc._lock:
                 svc.stats.bump("demotions")
+            tr = svc.tracer
+            if tr is not None:
+                # a demotion is an anomaly the flight recorder should
+                # dump: a stored plan measured slower than its rival
+                tr.note_anomaly("demotion", detail=art.signature[:16])
             # speculative re-solve through the normal revalidation path:
             # the eviction above turned this into a cold submit, and the
             # scorer (rebound to this hub's log) now knows the loser lost

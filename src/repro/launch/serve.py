@@ -100,6 +100,23 @@ def main():
                          "refreshes/demotions included, per-tenant slices "
                          "nested under \"tenants\") every N seconds "
                          "while serving (0 = off)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable plan-plane tracing and write Chrome "
+                         "trace_event JSON here: the completed-ticket "
+                         "flight recorder dumps on exit, anomalies "
+                         "(latency SLO, cert rejection, demotion) dump "
+                         "as they happen -- load the files in "
+                         "chrome://tracing or Perfetto")
+    ap.add_argument("--trace-slo-ms", type=float, default=None,
+                    help="flight-recorder latency SLO: a ticket slower "
+                         "than this many ms end-to-end dumps its trace "
+                         "as an anomaly (requires --trace-dir or "
+                         "--metrics-port)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus text), /traces "
+                         "(Chrome trace JSON) and /stats (registry "
+                         "snapshot) on 127.0.0.1:PORT from a stdlib "
+                         "HTTP thread (0 = ephemeral, address printed)")
     args = ap.parse_args()
 
     import numpy as np
@@ -143,15 +160,34 @@ def main():
         tenants.register(args.tenant, args.qos or "default")
         print(f"tenant {args.tenant!r} registered "
               f"(qos={args.qos or 'default'})")
+    observe = (args.trace_dir is not None or args.metrics_port is not None
+               or args.trace_slo_ms is not None)
     service = None
     if store is not None or fabric is not None or args.telemetry \
-            or args.verify != "off" or tenants is not None:
+            or args.verify != "off" or tenants is not None or observe:
         service = PlanService(
             store=store,
             executor="fabric" if fabric is not None else "pool",
             fabric=fabric,
             verify=args.verify,
             tenants=tenants)
+    obs_server = None
+    if observe:
+        service.enable_tracing(slo_ms=args.trace_slo_ms,
+                               trace_dir=args.trace_dir)
+        if args.trace_dir is not None:
+            print(f"tracing: flight recorder armed, Chrome trace dumps "
+                  f"land in {args.trace_dir}"
+                  + (f" (SLO {args.trace_slo_ms:g} ms)"
+                     if args.trace_slo_ms is not None else ""))
+        if args.metrics_port is not None:
+            from ..core.tracing import start_observability_server
+            obs_server = start_observability_server(
+                service.metrics, service.recorder, tracer=service.tracer,
+                port=args.metrics_port)
+            host_, port_ = obs_server.server_address[:2]
+            print(f"metrics: http://{host_}:{port_}/metrics "
+                  f"(also /traces, /stats)")
     if args.verify != "off":
         print(f"verification armed ({args.verify}): lint gate + "
               f"independent conflict certification"
@@ -165,9 +201,27 @@ def main():
         import threading
 
         def _stats_loop():
+            # per-tenant slices nest under "tenants" and the fabric's
+            # live counters (heartbeats included) under "fabric" on
+            # EVERY periodic line, not just the exit report; with
+            # tracing on, the MetricsRegistry gauges ride along too
             while True:
                 time.sleep(args.stats_interval)
-                print("stats:", json_mod.dumps(service.stats.as_dict()))
+                line = service.stats.as_dict()
+                if fabric is not None:
+                    fs = fabric.stats
+                    line["fabric"] = {
+                        "workers_alive": fabric.workers_alive,
+                        "heartbeats": fs.heartbeats,
+                        "leases": fs.leases,
+                        "requeues": fs.requeues,
+                        "evaluated": fs.evaluated,
+                    }
+                if service.metrics is not None:
+                    snap = service.metrics.snapshot()
+                    if snap.get("gauges"):
+                        line["gauges"] = snap["gauges"]
+                print("stats:", json_mod.dumps(line))
 
         threading.Thread(target=_stats_loop, daemon=True,
                          name="serve-stats").start()
@@ -266,6 +320,20 @@ def main():
         print(f"telemetry: {s.observations} observations "
               f"({flushed} flushed at exit), {s.refreshes} scorer "
               f"refreshes, {s.demotions} demotions")
+    if service is not None and service.recorder is not None:
+        rec = service.recorder
+        n_anom = len(rec.anomalies())
+        if args.trace_dir is not None and rec.traces():
+            import os as os_mod
+            path = rec.dump(os_mod.path.join(args.trace_dir,
+                                             "serve_trace.json"))
+            print(f"tracing: {len(rec.traces())} ticket traces "
+                  f"({n_anom} anomalies) -> {path}")
+        elif n_anom:
+            print(f"tracing: {n_anom} anomalies recorded "
+                  f"(pass --trace-dir to keep the dumps)")
+    if obs_server is not None:
+        obs_server.shutdown()
     if fabric is not None:
         fabric.shutdown()
 

@@ -87,6 +87,13 @@ def main():
     ap.add_argument("--fabric-wait-workers", type=int, default=0)
     ap.add_argument("--stats-interval", type=float, default=0.0,
                     help="print global + per-tenant stats every N seconds")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable plan-plane tracing; the flight recorder "
+                         "dumps Chrome trace_event JSON here on exit and "
+                         "on anomalies")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics, /traces and /stats on "
+                         "127.0.0.1:PORT (0 = ephemeral)")
     args = ap.parse_args()
 
     import json
@@ -126,12 +133,31 @@ def main():
         fabric=fabric, tenants=registry)
     print("tenants:", ", ".join(f"{n} (qos={q}, arch={a})"
                                 for n, q, a in fleet))
+    obs_server = None
+    if args.trace_dir is not None or args.metrics_port is not None:
+        service.enable_tracing(trace_dir=args.trace_dir)
+        if args.metrics_port is not None:
+            from ..core.tracing import start_observability_server
+            obs_server = start_observability_server(
+                service.metrics, service.recorder, tracer=service.tracer,
+                port=args.metrics_port)
+            host_, port_ = obs_server.server_address[:2]
+            print(f"metrics: http://{host_}:{port_}/metrics")
 
     if args.stats_interval > 0:
         def _stats_loop():
+            # per-tenant slices nest under "tenants"; live fabric
+            # heartbeat/lease counters ride along when a fabric is up
             while True:
                 time.sleep(args.stats_interval)
-                print("stats:", json.dumps(service.stats.as_dict()))
+                line = service.stats.as_dict()
+                if fabric is not None:
+                    line["fabric"] = {
+                        "workers_alive": fabric.workers_alive,
+                        "heartbeats": fabric.stats.heartbeats,
+                        "leases": fabric.stats.leases,
+                    }
+                print("stats:", json.dumps(line))
         threading.Thread(target=_stats_loop, daemon=True,
                          name="fleet-stats").start()
 
@@ -226,6 +252,15 @@ def main():
                   if v != sum(s.get(k, 0) for s in slices.values())]
     print("slice reconciliation:",
           "exact" if not mismatched else f"MISMATCH on {mismatched}")
+    if service.recorder is not None and args.trace_dir is not None \
+            and service.recorder.traces():
+        import os as os_mod
+        path = service.recorder.dump(
+            os_mod.path.join(args.trace_dir, "fleet_trace.json"))
+        print(f"tracing: {len(service.recorder.traces())} ticket "
+              f"traces -> {path}")
+    if obs_server is not None:
+        obs_server.shutdown()
     if fabric is not None:
         fabric.shutdown()
     service.shutdown()

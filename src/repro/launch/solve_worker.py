@@ -24,6 +24,7 @@ import os
 import queue
 import socket
 import threading
+import time
 from typing import Dict
 
 from ..core.candidates import (
@@ -35,6 +36,7 @@ from ..core.candidates import (
     space_from_wire,
 )
 from ..core.fabric import read_frame, write_frame
+from ..core.tracing import spans_to_wire
 
 RESULT_BATCH = 8      # events per result frame: keeps cuts/best-so-far fresh
 HB_INTERVAL = 2.0     # seconds between heartbeat frames (0 disables)
@@ -124,22 +126,44 @@ def run_worker(address: str, *, result_batch: int = RESULT_BATCH,
                             send_lock)
                 continue
             gate.update(msg.get("cuts") or {})
+            # a traced lease carries the driver's trace_id: measure the
+            # eval and result-wire stages locally (perf_counter, relative
+            # to lease receipt) and echo them on the done frame so the
+            # driver stitches them into ONE trace
+            traced = msg.get("trace") is not None
+            t_lease = time.perf_counter()
+            wire_s = 0.0
             shard = shard_from_indices(space, msg["indices"])
             batch, evaluated = [], 0
+            t_eval = time.perf_counter()
             for ev in evaluate(shard, gate=gate):
                 batch.append(ev)
                 evaluated += 1
                 if len(batch) >= result_batch:
+                    t_w = time.perf_counter()
                     write_frame(sock, {"t": "results", "lease_id": lid,
                                        "payload": events_to_wire(batch)},
                                 send_lock)
+                    wire_s += time.perf_counter() - t_w
                     batch = []
             if batch:
+                t_w = time.perf_counter()
                 write_frame(sock, {"t": "results", "lease_id": lid,
                                    "payload": events_to_wire(batch)},
                             send_lock)
-            write_frame(sock, {"t": "done", "lease_id": lid,
-                               "evaluated": evaluated}, send_lock)
+                wire_s += time.perf_counter() - t_w
+            done = {"t": "done", "lease_id": lid, "evaluated": evaluated}
+            if traced:
+                now = time.perf_counter()
+                done["spans"] = spans_to_wire([
+                    {"name": "w-lease", "start": t_lease, "end": now,
+                     "attrs": {"pid": os.getpid(),
+                               "wire_ms": round(wire_s * 1e3, 3)}},
+                    {"name": "w-eval", "start": t_eval, "end": now,
+                     "attrs": {"evaluated": evaluated,
+                               "units": len(msg["indices"])}},
+                ], t_lease)
+            write_frame(sock, done, send_lock)
         except OSError:
             break                         # fabric went away
         except Exception as e:            # solver bug: report, keep serving

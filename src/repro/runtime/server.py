@@ -32,6 +32,7 @@ index math -- places the rows on both paths.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Union
@@ -331,6 +332,12 @@ class Server:
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.positions = np.zeros(max_batch, np.int64)  # next record slot
         self.ticks = 0
+        # rolling serve trace (only when the answering service has
+        # tracing on): gather/decode/scatter/promote spans accumulate
+        # under one trace_id, finished + restarted every
+        # _SERVE_TRACE_TICKS ticks so completed windows reach the
+        # flight recorder instead of growing forever
+        self._serve_trace: Optional[str] = None
 
     # -- banked token records ----------------------------------------------------
     def _adopt_kv_artifact(self, art: CompiledBankingPlan,
@@ -559,7 +566,6 @@ class Server:
         if hub is None or art is None or not art.signature:
             self._tick()
             return
-        import time
         before = self.ticks
         t0 = time.perf_counter()
         self._tick()
@@ -567,24 +573,62 @@ class Server:
             hub.observe(art, "tick", (self.max_batch,),
                         time.perf_counter() - t0)
 
+    _SERVE_TRACE_TICKS = 256   # ticks per rolling serve-trace window
+
+    def _serve_tracer(self):
+        """(tracer, serve trace_id) off the answering service, or
+        (None, None) -- the serve loop traces only when the plan
+        service does."""
+        tr = getattr(self._kv_service, "tracer", None)
+        if tr is None:
+            return None, None
+        tid = self._serve_trace
+        if tid is None:
+            from ..core.tracing import new_trace_id
+            tid = self._serve_trace = new_trace_id()
+            tr.label(tid, "serve loop")
+        return tr, tid
+
     def _tick(self):
+        tr, tid = self._serve_tracer()
+        metrics = getattr(self._kv_service, "metrics", None)
+        t_tick = time.perf_counter()
+        swaps0 = self.swaps + self.promotions \
+            + self.joint_swaps + self.joint_promotions
         if self._joint is not None:
             self._maybe_swap_joint()
         else:
             self._maybe_swap_kv()
+        if tr is not None and self.swaps + self.promotions \
+                + self.joint_swaps + self.joint_promotions > swaps0:
+            tr.record(tid, "promote", t_tick, time.perf_counter(),
+                      swaps=self.swaps, promotions=self.promotions,
+                      joint_swaps=self.joint_swaps,
+                      joint_promotions=self.joint_promotions)
         self._admit()
         if not self.active:
             return
         if self.kv_records is not None:
+            t_g = time.perf_counter()
             nxt_in = self._gather_next_tokens()   # one batched banked gather
+            t_g_end = time.perf_counter()
+            if tr is not None:
+                tr.record(tid, "gather", t_g, t_g_end,
+                          slots=len(self.active))
+            if metrics is not None:
+                metrics.observe("serve_gather_ms", (t_g_end - t_g) * 1e3)
         else:
             nxt_in = {s: getattr(r, "_next", 1)
                       for s, r in self.active.items()}
         for slot in self.active:
             self.tokens = self.tokens.at[slot, 0].set(nxt_in[slot])
+        t_d = time.perf_counter()
         nxt, _, self.cache = self._decode(self._params, self.cache,
                                           self.tokens)
         nxt = np.asarray(nxt)
+        if tr is not None:
+            tr.record(tid, "decode", t_d, time.perf_counter(),
+                      slots=len(self.active))
         finished = []
         for slot, req in self.active.items():
             tok = int(nxt[slot, 0])
@@ -599,9 +643,31 @@ class Server:
             if self.pager is not None:
                 self.pager.release(slot)
         if self.kv_records is not None:
+            t_s = time.perf_counter()
             self._flush_records()   # this tick's records land this tick
+            t_s_end = time.perf_counter()
+            if tr is not None:
+                tr.record(tid, "scatter", t_s, t_s_end)
+            if metrics is not None:
+                metrics.observe("serve_scatter_ms",
+                                (t_s_end - t_s) * 1e3)
         self.ticks += 1
+        if metrics is not None:
+            metrics.observe("serve_tick_ms",
+                            (time.perf_counter() - t_tick) * 1e3)
+        if tr is not None and self.ticks % self._SERVE_TRACE_TICKS == 0:
+            # roll the window: the finished trace reaches the flight
+            # recorder; the next tick starts a fresh trace_id
+            tr.finish(tid, status="ok")
+            self._serve_trace = None
 
     def run(self, max_ticks: int = 1000):
         while (self.queue or self.active) and self.ticks < max_ticks:
             self.tick()
+        # flush a partial serve-trace window so short runs still land
+        # their gather/decode/scatter/promote spans in the recorder
+        if self._serve_trace is not None:
+            tr = getattr(self._kv_service, "tracer", None)
+            if tr is not None:
+                tr.finish(self._serve_trace, status="ok")
+            self._serve_trace = None

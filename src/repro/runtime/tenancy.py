@@ -184,6 +184,9 @@ class AdmissionController:
 
     def __init__(self, registry: TenantRegistry):
         self.registry = registry
+        # a MetricsRegistry (PlanService.enable_tracing assigns it):
+        # deferral-backlog depth lands as a gauge on every change
+        self.metrics = None
         self._lock = threading.Lock()
         self._inflight: Dict[str, int] = {}
         self._deferred: Dict[str, Deque] = {}
@@ -207,7 +210,10 @@ class AdmissionController:
             if cap is not None and len(backlog) >= cap:
                 return False
             backlog.append(entry)
-            return True
+            depth = len(backlog)
+        if self.metrics is not None:
+            self.metrics.set_gauge("deferred_backlog", depth, tenant=name)
+        return True
 
     def release(self, name: str) -> List:
         """Free one of ``name``'s in-flight slots; promote as much of
@@ -218,6 +224,9 @@ class AdmissionController:
             backlog = self._deferred.get(name)
             while backlog and self._try_acquire_locked(name):
                 out.append(backlog.popleft())
+            depth = len(backlog) if backlog else 0
+        if self.metrics is not None and out:
+            self.metrics.set_gauge("deferred_backlog", depth, tenant=name)
         return out
 
     def inflight(self, name: str) -> int:
@@ -247,6 +256,9 @@ class FairShareQueue:
 
     def __init__(self, registry: Optional[TenantRegistry] = None):
         self._registry = registry
+        # a MetricsRegistry (PlanService.enable_tracing assigns it):
+        # queue depth as a gauge, pops as a per-tenant counter
+        self.metrics = None
         self._cond = threading.Condition()
         self._heaps: Dict[str, List[Tuple]] = {}
         self._pass: Dict[str, float] = {}
@@ -278,6 +290,9 @@ class FairShareQueue:
             self._size += 1
             self._unfinished += 1
             self._cond.notify()
+            depth = self._size
+        if self.metrics is not None:
+            self.metrics.set_gauge("queue_depth", depth)
 
     def get(self):
         with self._cond:
@@ -294,7 +309,11 @@ class FairShareQueue:
             self._pass[name] = (self._pass.get(name, 0.0)
                                 + _STRIDE / self._weight(name))
             self._size -= 1
-            return item
+            depth = self._size
+        if self.metrics is not None:
+            self.metrics.set_gauge("queue_depth", depth)
+            self.metrics.inc("queue_pops", tenant=name)
+        return item
 
     def task_done(self) -> None:
         with self._cond:
